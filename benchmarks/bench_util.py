@@ -1,0 +1,18 @@
+import time
+
+import numpy as np
+
+
+def time_call(fn, *args, warmup=1, iters=3, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return 1e6 * float(np.median(ts))
+
+
+def emit(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}")

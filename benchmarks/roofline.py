@@ -1,0 +1,90 @@
+"""§Roofline generator: reads the dry-run records and derives the three-term
+roofline per (arch × shape × mesh).
+
+  compute   = HLO_FLOPs / (chips · 197 TF/s)   [HLO_FLOPs = per-dev · chips]
+  memory    = HLO_bytes / (chips · 819 GB/s)
+  collective= coll_bytes / (chips · 50 GB/s)
+
+`*_corrected` fields are loop-corrected per-device totals (hlo_stats.py), so
+term_x = per_device_x / per_chip_rate. Roofline fraction (the §Perf score) =
+(MODEL_FLOPS/(chips·peak)) / max(terms) — how close the useful work runs to
+the machine's binding limit. Writes results/roofline.md + CSV lines.
+"""
+import json
+import os
+
+PEAK = 197e12          # bf16 FLOP/s per chip
+HBM = 819e9            # B/s per chip
+ICI = 50e9             # B/s per link
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun2")
+
+
+def load(d=None):
+    d = d or RESULTS
+    recs = []
+    for f in sorted(os.listdir(d)):
+        if f.endswith(".json"):
+            r = json.load(open(os.path.join(d, f)))
+            if r.get("status") == "ok" and not r.get("tag"):
+                recs.append(r)
+    return recs
+
+
+def terms(r):
+    chips = r["chips"]
+    comp = r.get("flops_corrected", 0.0) / PEAK
+    mem = r.get("bytes_corrected", 0.0) / HBM
+    coll = r.get("collective_bytes_corrected", 0.0) / ICI
+    useful = r.get("model_flops", 0.0) / (chips * PEAK)
+    dom = max(comp, mem, coll, 1e-30)
+    which = ("compute" if dom == comp else
+             "memory" if dom == mem else "collective")
+    frac = useful / dom
+    return dict(compute_s=comp, memory_s=mem, collective_s=coll,
+                dominant=which, useful_s=useful, roofline_frac=frac,
+                flops_ratio=r.get("model_flops", 0) /
+                max(r.get("flops_corrected", 1) * chips, 1))
+
+
+def advice(t, r):
+    if t["dominant"] == "collective":
+        return ("cut TP collective volume: larger per-chip batch, overlap "
+                "psum with compute, reduce-scatter instead of all-reduce")
+    if t["dominant"] == "memory":
+        return ("bf16 stashes + fusion; raise arithmetic intensity with "
+                "bigger microbatch per chip")
+    if t["flops_ratio"] < 0.5:
+        return ("trim non-useful compute: remat recompute, causal-cond "
+                "overcount, replicated attention heads")
+    return "compute-bound at healthy ratio: tune kernel tiling / MXU shapes"
+
+
+def main():
+    recs = load()
+    print("# roofline: arch, shape, mesh, compute_s, memory_s, collective_s,"
+          " dominant, roofline_frac, model/HLO")
+    lines = ["| arch | shape | mesh | compute (s) | memory (s) | "
+             "collective (s) | dominant | roofline frac | model/HLO | "
+             "what moves it |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        t = terms(r)
+        print(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},0.0,"
+              f"comp={t['compute_s']:.3g};mem={t['memory_s']:.3g};"
+              f"coll={t['collective_s']:.3g};dom={t['dominant']};"
+              f"frac={t['roofline_frac']:.3f}")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+            f" {t['compute_s']:.3g} | {t['memory_s']:.3g} |"
+            f" {t['collective_s']:.3g} | {t['dominant']} |"
+            f" {t['roofline_frac']:.3f} | {t['flops_ratio']:.2f} |"
+            f" {advice(t, r)} |")
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.md", "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"# wrote results/roofline.md ({len(recs)} cells)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Benchmark harness: one module per paper table/figure + system benches.
+Prints ``name,us_per_call,derived`` CSV lines."""
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (kernels_bench, roofline, sa_throughput, supersteps,
+                   table1_example, table2_covers, table3_rounds)
+    mods = [table1_example, table2_covers, table3_rounds, supersteps,
+            sa_throughput, kernels_bench, roofline]
+    failed = []
+    for m in mods:
+        name = m.__name__.split(".")[-1]
+        print(f"## {name}")
+        try:
+            m.main()
+        except Exception as e:
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name},0.0,ERROR={e}")
+    if failed:
+        print(f"# FAILED: {failed}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""SA construction throughput vs n: JAX DC-v vs numpy reference vs
+prefix-doubling oracle (sequential-side evidence for the paper's O(vn))."""
+import numpy as np
+
+from repro.core.dcv_jax import suffix_array_jax
+from repro.core.oracle import suffix_array_doubling
+from repro.core.seq_ref import suffix_array_dcv
+
+from .bench_util import emit, time_call
+
+
+def main():
+    rng = np.random.default_rng(0)
+    print("# sa_throughput: builder, n, us, Mchars/s")
+    for n in (10_000, 50_000, 200_000):
+        x = rng.integers(0, 256, size=n)
+        for name, fn in (
+            ("jax_dcv", lambda: suffix_array_jax(x)),
+            ("seq_ref", lambda: suffix_array_dcv(x)),
+            ("doubling", lambda: suffix_array_doubling(x)),
+        ):
+            if name == "seq_ref" and n > 50_000:
+                continue          # reference is the executable spec, slow
+            us = time_call(fn, iters=2)
+            emit(f"sa_throughput/{name}/n={n}", us,
+                 f"Mchars_s={n / us:.2f}")
+
+
+if __name__ == "__main__":
+    main()

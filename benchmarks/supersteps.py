@@ -1,0 +1,77 @@
+"""Headline claim (C4): BSP synchronisation cost S(p).
+
+Measured supersteps on a real 8-shard run + the analytic cost model for
+p up to 2^20, against the paper's O(log log p) and Kärkkäinen et al.'s
+O(log² p) baselines. The per-round superstep constant is the measured one
+(SM1=11, SM2=9, base=1)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from repro.core.difference_cover import difference_cover
+from repro.core.seq_ref import accelerated_next_v, fixed_next_v
+
+from .bench_util import emit
+
+PER_ROUND = 20          # SM1 (11) + SM2 (9), measured by BSPCounters
+BASE = 1
+
+
+def model_supersteps(n, p, schedule):
+    """Rounds until |X'| ≤ n/p (the paper's sequential-base condition)."""
+    n0, v, rounds = n, 3, 0
+    while n > max(n0 // p, 2 * p * v, 1024) and rounds < 500:
+        D = difference_cover(min(max(v, 3), 2048))
+        n = len(D) * -(-n // v)
+        v = schedule(v, len(D), n)
+        rounds += 1
+    return PER_ROUND * rounds + BASE
+
+
+def measured():
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    code = textwrap.dedent("""
+    import jax, numpy as np
+    from jax.sharding import Mesh
+    from repro.bsp.suffix_array import suffix_array_bsp
+    from repro.bsp.counters import BSPCounters
+    mesh = Mesh(np.array(jax.devices()).reshape(8), ("bsp",))
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 2, size=4096)
+    ct = BSPCounters()
+    suffix_array_bsp(x, mesh, base_threshold=64, counters=ct)
+    print(f"RESULT S={ct.supersteps} H={ct.comm_words} W={ct.work}")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = src
+    try:
+        r = subprocess.run([sys.executable, "-c", code], env=env, timeout=600,
+                           capture_output=True, text=True)
+        for line in r.stdout.splitlines():
+            if line.startswith("RESULT"):
+                emit("supersteps/measured_p8_n4096", 0.0,
+                     line.replace("RESULT ", "").replace(" ", ";"))
+    except Exception as e:  # pragma: no cover
+        emit("supersteps/measured_p8_n4096", 0.0, f"error={e}")
+
+
+def main():
+    measured()
+    print("# model: p, S_accelerated, S_fixed_v3, karkkainen_log2p_bound")
+    n = 1 << 44
+    for k in range(4, 22, 2):
+        p = 1 << k
+        sa = model_supersteps(n, p, accelerated_next_v)
+        sf = model_supersteps(n, p, fixed_next_v)
+        kk = PER_ROUND * (np.log2(p) ** 2) / 4
+        emit(f"supersteps/p=2^{k}", 0.0,
+             f"accel={sa};fixed={sf};log2p_sq~{kk:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Table 1: the worked suffix-array example (correctness demo + the
+smallest end-to-end timing)."""
+import numpy as np
+
+from repro.core.dcv_jax import suffix_array_jax
+from repro.core.seq_ref import suffix_array_dcv
+
+from .bench_util import emit, time_call
+
+X = np.array([0, 2, 1, 0, 0, 2, 4, 3, 1, 1, 4, 0])
+WANT = [11, 3, 0, 4, 2, 8, 9, 1, 5, 7, 10, 6]
+
+
+def main():
+    assert suffix_array_dcv(X, base_threshold=4).tolist() == WANT
+    assert suffix_array_jax(X, base_threshold=4).tolist() == WANT
+    us = time_call(lambda: suffix_array_jax(X, base_threshold=4))
+    emit("table1/worked_example", us, "match=exact")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Paper Table 2: difference-cover sizes |D_v| — ours vs Colbourn–Ling vs the
+(1+√(4v−3))/2 lower bound."""
+from repro.core.difference_cover import (cover_size_lower_bound,
+                                         difference_cover)
+
+from .bench_util import emit, time_call
+
+PAPER_CL = {5: 4, 13: 4, 14: 10, 73: 10, 74: 16, 181: 16, 182: 22, 337: 22,
+            338: 28, 541: 28, 1024: 40, 2048: 58}
+
+
+def main():
+    print("# table2: v, |D|_ours, |D|_paper(CL), lower_bound")
+    for v in sorted(PAPER_CL):
+        us = time_call(lambda: difference_cover.__wrapped__(v), iters=1)
+        D = difference_cover(v)
+        emit(f"table2/v={v}", us,
+             f"ours={len(D)};paper={PAPER_CL[v]};lb={cover_size_lower_bound(v):.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Batched serving example: prefill + KV-cache decode on an attention-free
+arch (rwkv6) and a local/global attention arch (gemma3).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    for arch in ("rwkv6-1.6b", "gemma3-1b"):
+        print(f"== {arch} ==")
+        sys.argv = [sys.argv[0], "--arch", arch, "--smoke",
+                    "--batch", "4", "--prompt-len", "12", "--gen", "20"]
+        serve.main()
+
+
+if __name__ == "__main__":
+    main()

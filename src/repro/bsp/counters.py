@@ -1,0 +1,43 @@
+"""BSP cost accounting (Valiant's W, H, S — paper §4).
+
+The shard_map implementation is instrumented at every collective call site:
+one superstep per barrier, with analytic per-superstep h (max words in + max
+words out per processor) and w (local work estimate). This reproduces the
+paper's cost analysis measurably (EXPERIMENTS C4/C5) and doubles as a pure
+cost model: the driver can be run in `model_only` mode for arbitrary p
+without executing anything.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class BSPCounters:
+    supersteps: int = 0
+    comm_words: int = 0          # H = Σ_s h_s
+    work: int = 0                # W = Σ_s w_s
+    log: list = field(default_factory=list)
+    enabled: bool = True
+
+    def superstep(self, label: str, *, h: int = 0, w: int = 0) -> None:
+        if not self.enabled:
+            return
+        self.supersteps += 1
+        self.comm_words += int(h)
+        self.work += int(w)
+        self.log.append({"label": label, "h": int(h), "w": int(w)})
+
+    def local(self, label: str, *, w: int) -> None:
+        """Local-only computation phase (no barrier, merged into next step)."""
+        if not self.enabled:
+            return
+        self.work += int(w)
+        if self.log:
+            self.log[-1]["w_post"] = self.log[-1].get("w_post", 0) + int(w)
+
+    def summary(self) -> dict:
+        return {"S": self.supersteps, "H": self.comm_words, "W": self.work}
+
+
+NULL_COUNTERS = BSPCounters(enabled=False)

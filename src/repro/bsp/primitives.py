@@ -1,0 +1,98 @@
+"""Shard-local vectorised primitives used by the BSP suffix-array pipeline.
+
+Everything here runs *inside* shard_map on fixed-shape int32 arrays with
+validity masks (BSP processors hold equal-size blocks; ragged reality is
+expressed with masks, never dynamic shapes).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def compact_valid(rows: jnp.ndarray, valid: jnp.ndarray):
+    """Stable-move valid rows to the front. rows [m, W], valid bool[m]."""
+    m = rows.shape[0]
+    order = jnp.argsort(~valid, stable=True)
+    return rows[order], valid[order], order
+
+
+def within_group_index(group: jnp.ndarray, valid: jnp.ndarray):
+    """For each element, its index among *valid* elements with the same
+    `group` value (order = original position). Invalid elements get 0.
+
+    Vectorised via sort + run-start cummax. Returns int32[m].
+    """
+    m = group.shape[0]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    big = jnp.where(valid, group.astype(jnp.int32), INT32_MAX)
+    order = jnp.argsort(big, stable=True)            # valid groups first
+    g_sorted = big[order]
+    pos = jnp.arange(m, dtype=jnp.int32)
+    boundary = jnp.ones(m, dtype=bool)
+    if m > 1:
+        boundary = boundary.at[1:].set(g_sorted[1:] != g_sorted[:-1])
+    run_start = jax.lax.cummax(jnp.where(boundary, pos, 0))
+    within_sorted = pos - run_start
+    out = jnp.zeros(m, dtype=jnp.int32).at[order].set(within_sorted)
+    return jnp.where(valid, out, 0)
+
+
+def counts_per_bucket(dest: jnp.ndarray, valid: jnp.ndarray, p: int):
+    """Histogram of dest (∈[0,p)) over valid rows → int32[p].
+
+    One-hot matmul formulation (MXU-friendly; see kernels/radix_hist)."""
+    oh = (dest[:, None] == jnp.arange(p, dtype=dest.dtype)[None, :]) & valid[:, None]
+    return jnp.sum(oh.astype(jnp.int32), axis=0)
+
+
+def lex_lt_rows(a: jnp.ndarray, b: jnp.ndarray):
+    """Row-wise lexicographic a < b for int rows [N, W]; ties → False."""
+    neq = a != b
+    any_neq = jnp.any(neq, axis=-1)
+    first = jnp.argmax(neq, axis=-1)
+    a_star = jnp.take_along_axis(a, first[:, None], axis=-1)[:, 0]
+    b_star = jnp.take_along_axis(b, first[:, None], axis=-1)[:, 0]
+    return jnp.where(any_neq, a_star < b_star, False)
+
+
+def searchsorted_rows(splitters: jnp.ndarray, rows: jnp.ndarray, lt_fn=None):
+    """dest[i] = #{s : splitter_s < row_i} for row-valued splitters.
+
+    splitters [q, W] must be sorted by the same order. Vectorised binary
+    search, ⌈log2 q⌉ iterations. `lt_fn(a_rows, b_rows)` defaults to
+    lexicographic on int columns. Returns int32[m] in [0, q].
+    """
+    if lt_fn is None:
+        lt_fn = lex_lt_rows
+    q = splitters.shape[0]
+    m = rows.shape[0]
+    lo = jnp.zeros(m, dtype=jnp.int32)
+    hi = jnp.full(m, q, dtype=jnp.int32)
+    steps = max(1, int(math.ceil(math.log2(max(q, 2)))) + 1)
+    for _ in range(steps):
+        mid = (lo + hi) // 2
+        mid_c = jnp.clip(mid, 0, q - 1)
+        s = splitters[mid_c]
+        # splitter[mid] < row  → answer is right of mid
+        go_right = lt_fn(s, rows) & (mid < hi)
+        lo = jnp.where(go_right, mid + 1, lo)
+        hi = jnp.where(go_right, hi, jnp.maximum(mid, lo))
+    return lo
+
+
+def local_sort_rows(rows: jnp.ndarray, valid: jnp.ndarray, num_keys: int):
+    """Sort rows (int32[m, W]) lexicographically by first num_keys cols,
+    invalid rows last; stable by trailing columns left intact via index key.
+    Returns (rows_sorted, valid_sorted)."""
+    m = rows.shape[0]
+    pad_flag = (~valid).astype(jnp.int32)
+    operands = (pad_flag,) + tuple(rows[:, c] for c in range(num_keys)) + (
+        jnp.arange(m, dtype=jnp.int32),)
+    out = jax.lax.sort(operands, num_keys=num_keys + 2)
+    perm = out[-1]
+    return rows[perm], valid[perm]

@@ -1,0 +1,162 @@
+"""Algorithm 2 — parallel sorting by regular sampling (Shi–Schaeffer /
+Chan–Dehne), generic over key-based and comparator-based orders.
+
+Row contract
+------------
+Rows are int32[m_local, W] with a fixed column layout:
+  col 0      : valid flag (0 = valid, 1 = pad)  — pads sort last,
+  col 1..W-2 : payload (keys first for key-mode),
+  col W-1    : unique global index — strict total-order tiebreak.
+`lt_fn(a, b) -> bool[N]` must be a strict total order consistent with that
+contract; `local_sort(rows) -> rows` must sort by the same order. The
+key-based fast path uses variadic lax.sort; the comparator path (the paper's
+Lemma-1 suffix order) uses the bitonic network from repro.core.bitonic.
+
+Supersteps per call: 6 (sample gather, 2×a2a bucket exchange, count gather,
+2×a2a rebalance) — O(1) as in the paper. Communication per shard:
+O(m_local + p²) words (regular-sampling bucket bound 2m/p + slack).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.bitonic import bitonic_sort, next_pow2
+from .exchange import exchange
+from .primitives import lex_lt_rows, searchsorted_rows
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def make_pad_rows(k: int, W: int, tag_base: int = 1 << 29):
+    """Pad rows: valid=1, payload=MAX, unique huge tiebreak index."""
+    pad = jnp.full((k, W), INT32_MAX, dtype=jnp.int32)
+    pad = pad.at[:, 0].set(1)
+    pad = pad.at[:, W - 1].set(tag_base + jnp.arange(k, dtype=jnp.int32))
+    return pad
+
+
+def lex_lt_full(a: jnp.ndarray, b: jnp.ndarray):
+    """Default strict total order: lexicographic over ALL columns.
+
+    Strict because col W-1 is unique."""
+    return lex_lt_rows(a, b)
+
+
+def local_sort_lex(rows: jnp.ndarray) -> jnp.ndarray:
+    m, W = rows.shape
+    operands = tuple(rows[:, c] for c in range(W))
+    out = jax.lax.sort(operands + (jnp.arange(m, dtype=jnp.int32),),
+                       num_keys=W)
+    perm = out[-1]
+    return rows[perm]
+
+
+def make_local_sort_bitonic(lt_fn):
+    def local_sort(rows: jnp.ndarray) -> jnp.ndarray:
+        m, W = rows.shape
+        n2 = next_pow2(m)
+        if n2 != m:
+            rows = jnp.concatenate([rows, make_pad_rows(n2 - m, W)], axis=0)
+        out = bitonic_sort({"rows": rows},
+                           lambda a, b: lt_fn(a["rows"], b["rows"]))
+        return out["rows"][:m]
+    return local_sort
+
+
+def psort_shard_body(
+    rows: jnp.ndarray,           # int32[m_local, W]
+    *,
+    p: int,
+    axis: str,
+    lt_fn=None,
+    local_sort=None,
+):
+    """Body to be run inside shard_map. Returns globally sorted, block-
+    balanced rows int32[m_local, W] (pads last globally)."""
+    if lt_fn is None:
+        lt_fn = lex_lt_full
+    if local_sort is None:
+        local_sort = local_sort_lex
+    m, W = rows.shape
+
+    # --- 1. local sort ---
+    rows = local_sort(rows)
+    nvalid = jnp.sum((rows[:, 0] == 0).astype(jnp.int32))
+
+    # --- 2. p+1 equally spaced primary samples (incl. min/max) ---
+    t = jnp.arange(p + 1, dtype=jnp.int32)
+    samp_idx = jnp.where(
+        nvalid > 0,
+        (t.astype(jnp.int64) * jnp.maximum(nvalid - 1, 0) // p).astype(jnp.int32),
+        0)
+    primary = rows[samp_idx]                                   # [p+1, W]
+    primary = jnp.where((nvalid > 0), primary, make_pad_rows(p + 1, W))
+
+    # --- 3. gather all p(p+1) samples everywhere (designated-processor step
+    #        replicated: same h, fewer supersteps — DESIGN §3) ---
+    all_samples = jax.lax.all_gather(primary, axis).reshape(p * (p + 1), W)
+    all_samples = local_sort(all_samples)
+    ns = jnp.sum((all_samples[:, 0] == 0).astype(jnp.int32))
+
+    # --- 4. p-1 secondary splitters → p buckets ---
+    tt = jnp.arange(1, p, dtype=jnp.int32)
+    sec_idx = jnp.where(
+        ns > 0,
+        (tt.astype(jnp.int64) * jnp.maximum(ns - 1, 0) // p).astype(jnp.int32),
+        0)
+    splitters = all_samples[sec_idx]                           # [p-1, W]
+
+    valid = rows[:, 0] == 0
+    dest = searchsorted_rows(splitters, rows, lt_fn=lt_fn)     # [m] ∈ [0,p)
+    dest = jnp.clip(dest, 0, p - 1)
+
+    # --- 5. bucket exchange (2 supersteps) + local sort ---
+    cap_out = 2 * m + 2 * p + 4
+    got, got_valid, over1 = exchange(rows, dest, valid, p=p, cap_out=cap_out,
+                                     axis=axis)
+    got = jnp.where(got_valid[:, None], got, make_pad_rows(cap_out, W))
+    got = local_sort(got)
+
+    # --- 6. rebalance to exactly m rows per shard, preserving global order ---
+    cnt = jnp.sum(got_valid.astype(jnp.int32))
+    counts = jax.lax.all_gather(cnt[None], axis).reshape(p)
+    offset = jnp.cumsum(counts) - counts
+    my_off = offset[jax.lax.axis_index(axis)]
+    gpos = my_off + jnp.arange(cap_out, dtype=jnp.int32)
+    v2 = got[:, 0] == 0
+    dest2 = jnp.clip(gpos // m, 0, p - 1)
+    # carry gpos so receivers can restore order with a cheap key sort
+    carried = jnp.concatenate([gpos[:, None].astype(jnp.int32), got], axis=1)
+    out, out_valid, over2 = exchange(carried, dest2, v2, p=p, cap_out=m,
+                                     axis=axis)
+    perm = jnp.argsort(jnp.where(out_valid, out[:, 0], INT32_MAX), stable=True)
+    out = out[perm][:, 1:]
+    out_valid = out_valid[perm]
+    out = jnp.where(out_valid[:, None], out, make_pad_rows(m, W))
+    return out, (over1 | over2)
+
+
+def run_psort(mesh, axis: str, rows_global, *, lt_fn=None, local_sort=None):
+    """Convenience wrapper: jit(shard_map(psort_shard_body)) over a 1-D mesh.
+
+    rows_global: int32[p*m, W] sharded (or shardable) on dim 0.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    p = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+
+    @functools.partial(jax.jit, out_shardings=(
+        NamedSharding(mesh, P(axis)), NamedSharding(mesh, P())))
+    @functools.partial(
+        jax.shard_map, mesh=mesh, in_specs=(P(axis),),
+        out_specs=(P(axis), P()))
+    def fn(rows):
+        out, over = psort_shard_body(rows, p=p, axis=axis, lt_fn=lt_fn,
+                                     local_sort=local_sort)
+        return out, over[None]
+
+    return fn(rows_global)

@@ -1,0 +1,357 @@
+"""Algorithm 3 — BSP parallel suffix array construction by accelerated
+sampling, on a 1-D shard_map mesh.
+
+Round structure (per recursion level i, modulus v = v_i, cover D = D_i):
+
+  SM1  (11 supersteps): char halo → sample super-character windows →
+       Algorithm-2 psort (key mode) → global dense rank (+ all-distinct
+       flag) → route ranks to block-major X' layout.
+  rec  : recurse on X' with v' = min(⌈v^{5/4}⌉, ⌈v²/|D|⌉−1, |X'|); base case
+       (|X'| ≤ threshold ≈ n/p) gathers X' and solves with the single-device
+       DC-v (the paper's "send to processor 0").
+  SM2  (9 supersteps): route sample ranks back to position owners → rank/char
+       halos → build self-contained Lemma-1 payloads → Algorithm-2 psort in
+       comparator mode (the fused Steps 2–4, DESIGN §3.3) → SA.
+
+All shapes are data-independent functions of (n, p, schedule): the index
+domain is padded to n_pv = p·v·⌈n/(p·v)⌉ so every shard holds n_loc = n_pv/p
+characters (a multiple of v) and exactly m_loc = |D|·n_loc/v sample windows.
+Sentinel-pad suffixes sort first and are trimmed at the end.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.bitonic import lex_lt_int
+from ..core.difference_cover import cover_tables
+from ..core.dcv_jax import suffix_array_jax
+from ..core.seq_ref import accelerated_next_v
+from .counters import BSPCounters, NULL_COUNTERS
+from .exchange import exchange
+from .psort import (lex_lt_full, local_sort_lex, make_local_sort_bitonic,
+                    make_pad_rows, psort_shard_body)
+
+INT32_MAX = np.int32(np.iinfo(np.int32).max)
+
+
+# --------------------------------------------------------------------------
+# payload comparator (Lemma 1)
+# --------------------------------------------------------------------------
+def make_payload_lt(v: int, dsize: int, lam_i1, lam_i2):
+    """Strict total order on payload rows
+    [valid | chars(v) | ranks(|D|) | klass | gidx]."""
+    cr = 1 + v
+    ck = 1 + v + dsize
+    cg = 2 + v + dsize
+
+    def lt(a, b):
+        ka = jnp.clip(a[:, ck], 0, v - 1)
+        kb = jnp.clip(b[:, ck], 0, v - 1)
+        lt_head, eq_head = lex_lt_int(a[:, : 1 + v], b[:, : 1 + v])
+        ia = lam_i1[ka, kb]
+        ib = lam_i2[ka, kb]
+        ra = jnp.take_along_axis(a[:, cr:cr + dsize], ia[:, None], axis=1)[:, 0]
+        rb = jnp.take_along_axis(b[:, cr:cr + dsize], ib[:, None], axis=1)[:, 0]
+        return jnp.where(
+            eq_head & (ra != rb), ra < rb,
+            jnp.where(eq_head, a[:, cg] < b[:, cg], lt_head))
+
+    return lt
+
+
+# --------------------------------------------------------------------------
+# round geometry
+# --------------------------------------------------------------------------
+def round_geometry(n: int, p: int, v: int):
+    n_pv = p * v * math.ceil(n / (p * v))
+    n_loc = n_pv // p
+    tabs = cover_tables(v)
+    dsize = len(tabs.D)
+    m_loc = dsize * n_loc // v          # samples per shard == X' elems/shard
+    m_tot = m_loc * p
+    return n_pv, n_loc, m_loc, m_tot, tabs
+
+
+# --------------------------------------------------------------------------
+# SM1: sample sort + X' construction
+# --------------------------------------------------------------------------
+def pack_window_columns(win: jnp.ndarray, sigma: int):
+    """Radix key packing (§Perf SA-iteration A): pack several characters of
+    a known alphabet bound σ into each int32 sort column, big-endian, order-
+    preserving (fixed-width fields ⇒ lexicographic order is unchanged).
+    Characters are shifted +1 so the -1 sentinel packs as 0. Cuts the sort/
+    exchange width from v to ⌈v·bits/30⌉ columns."""
+    v = win.shape[1]
+    bits = max(1, int(math.ceil(math.log2(max(sigma + 2, 2)))))
+    per = max(1, 30 // bits)
+    if per < 2:
+        return win
+    shifted = (win + 1).astype(jnp.int32)                  # [m, v] ∈ [0, σ+1]
+    ncol = -(-v // per)
+    pad = ncol * per - v
+    if pad:
+        shifted = jnp.concatenate(
+            [shifted, jnp.zeros((win.shape[0], pad), jnp.int32)], axis=1)
+    shifted = shifted.reshape(win.shape[0], ncol, per)
+    weights = jnp.asarray([1 << (bits * (per - 1 - j)) for j in range(per)],
+                          jnp.int32)
+    return jnp.sum(shifted * weights[None, None, :], axis=-1)
+
+
+def _sm1_body(xloc, *, p, v, n_loc, m_loc, tabs, axis, sigma=None):
+    dsize = len(tabs.D)
+    me = jax.lax.axis_index(axis)
+
+    # --- char halo: first v chars of next shard (last shard: sentinels) ---
+    halo = jax.lax.ppermute(xloc[:v], axis, [(s, s - 1) for s in range(1, p)])
+    halo = jnp.where(me == p - 1, jnp.full((v,), -1, jnp.int32), halo)
+    xp = jnp.concatenate([xloc, halo])                      # [n_loc + v]
+
+    # --- sample windows (block-local positions ≡ k (mod v), k ∈ D) ---
+    D = jnp.asarray(tabs.D, jnp.int32)
+    off = (D[:, None] + jnp.arange(n_loc // v, dtype=jnp.int32)[None, :] * v
+           ).reshape(-1)                                    # [m_loc] local pos
+    gpos = me.astype(jnp.int32) * n_loc + off
+    win = xp[off[:, None] + jnp.arange(v, dtype=jnp.int32)[None, :]]
+    if sigma is not None:
+        win = pack_window_columns(win, sigma)
+    w = win.shape[1]                       # packed key width ≤ v
+    rows = jnp.concatenate([
+        jnp.zeros((m_loc, 1), jnp.int32), win, gpos[:, None]], axis=1)
+
+    # --- Algorithm 2 (key mode) ---
+    rows, over = psort_shard_body(rows, p=p, axis=axis)
+
+    # --- global dense rank of windows + distinct flag ---
+    keys = rows[:, 1:1 + w]
+    prev_last = jax.lax.ppermute(keys[-1:], axis,
+                                 [(s, s + 1) for s in range(p - 1)])
+    first_b = jnp.where(me == 0, True, jnp.any(keys[0] != prev_last[0]))
+    b = jnp.ones(m_loc, dtype=jnp.int32)
+    b = b.at[0].set(first_b.astype(jnp.int32))
+    if m_loc > 1:
+        b = b.at[1:].set(jnp.any(keys[1:] != keys[:-1], axis=1).astype(jnp.int32))
+    loc_sum = jnp.sum(b)
+    sums = jax.lax.all_gather(loc_sum[None], axis).reshape(p)
+    offset = (jnp.cumsum(sums) - sums)[me]
+    rank = offset + jnp.cumsum(b) - 1                       # dense global rank
+    distinct = jax.lax.pmin(
+        jnp.min(b), axis) == 1                              # all boundaries
+
+    # --- route (j, rank) to X' owners; j = block-major sample index ---
+    d_idx = np.full(v, -1, np.int32)
+    for a_i, dd in enumerate(tabs.D):
+        d_idx[dd] = a_i
+    d_idx = jnp.asarray(d_idx)
+    g = rows[:, 1 + w]                                      # gpos
+    j = d_idx[g % v] * ((n_loc // v) * p) + g // v
+    rows2 = jnp.concatenate([
+        jnp.zeros((m_loc, 1), jnp.int32), rank[:, None].astype(jnp.int32),
+        j[:, None]], axis=1)
+    dest = jnp.clip(j // m_loc, 0, p - 1)
+    got, got_valid, over2 = exchange(
+        rows2, dest, jnp.ones(m_loc, bool), p=p, cap_out=m_loc, axis=axis)
+    xprime = jnp.zeros(m_loc, jnp.int32).at[
+        jnp.where(got_valid, got[:, 2] % m_loc, m_loc)
+    ].set(got[:, 1], mode="drop")
+    return xprime, distinct[None], (over | over2)[None]
+
+
+# --------------------------------------------------------------------------
+# SM2: rank scatter + fused Lemma-1 payload sort
+# --------------------------------------------------------------------------
+def _sm2_body(xloc, sa_rank_loc, *, p, v, n_loc, m_loc, tabs, axis):
+    dsize = len(tabs.D)
+    me = jax.lax.axis_index(axis)
+    D_np = np.asarray(tabs.D, np.int32)
+    per_block = (n_loc // v) * p                            # block length in X'
+
+    # --- route sample ranks back to position owners ---
+    jloc = me.astype(jnp.int32) * m_loc + jnp.arange(m_loc, dtype=jnp.int32)
+    blk = jloc // per_block                                  # index into D
+    pos = jnp.asarray(D_np)[jnp.clip(blk, 0, dsize - 1)] + (jloc % per_block) * v
+    rows = jnp.concatenate([
+        jnp.zeros((m_loc, 1), jnp.int32),
+        sa_rank_loc[:, None].astype(jnp.int32), pos[:, None]], axis=1)
+    dest = jnp.clip(pos // n_loc, 0, p - 1)
+    got, got_valid, over = exchange(
+        rows, dest, jnp.ones(m_loc, bool), p=p, cap_out=m_loc, axis=axis)
+
+    rank_loc = jnp.full(n_loc + v, -1, jnp.int32).at[
+        jnp.where(got_valid, got[:, 2] % n_loc, n_loc + v)
+    ].set(got[:, 1], mode="drop")
+
+    # --- halos: rank (v) and chars (v) from next shard ---
+    fwd = jnp.concatenate([rank_loc[:v], xloc[:v]])
+    halo = jax.lax.ppermute(fwd, axis, [(s, s - 1) for s in range(1, p)])
+    halo = jnp.where(me == p - 1, jnp.full((2 * v,), -1, jnp.int32), halo)
+    rank_loc = rank_loc.at[n_loc:].set(halo[:v])
+    xp = jnp.concatenate([xloc, halo[v:]])                   # [n_loc + v]
+
+    # --- Lemma-1 payloads for ALL local suffixes ---
+    offs = jnp.arange(n_loc, dtype=jnp.int32)
+    gidx = me.astype(jnp.int32) * n_loc + offs
+    chars = xp[offs[:, None] + jnp.arange(v, dtype=jnp.int32)[None, :]]
+    klass = gidx % v
+    shifts = jnp.asarray(tabs.shifts, jnp.int32)             # [v, |D|]
+    rvals = rank_loc[jnp.clip(offs[:, None] + shifts[klass], 0, n_loc + v - 1)]
+    payload = jnp.concatenate([
+        jnp.zeros((n_loc, 1), jnp.int32), chars, rvals,
+        klass[:, None], gidx[:, None]], axis=1)
+
+    lam_i1 = jnp.asarray(tabs.lam_idx1, jnp.int32)
+    lam_i2 = jnp.asarray(tabs.lam_idx2, jnp.int32)
+    lt = make_payload_lt(v, dsize, lam_i1, lam_i2)
+    out, over2 = psort_shard_body(
+        payload, p=p, axis=axis, lt_fn=lt,
+        local_sort=make_local_sort_bitonic(lt))
+    sa = out[:, 2 + v + dsize]                               # gidx column
+    return sa, (over | over2)[None]
+
+
+# --------------------------------------------------------------------------
+# jitted stage wrappers
+# --------------------------------------------------------------------------
+@functools.partial(
+    jax.jit, static_argnames=("p", "v", "n_loc", "m_loc", "vkey", "axis",
+                              "mesh_holder", "sigma"))
+def _sm1(xg, *, p, v, n_loc, m_loc, vkey, axis, mesh_holder, sigma=None):
+    mesh = mesh_holder.mesh
+    tabs = cover_tables(v)
+    body = functools.partial(_sm1_body, p=p, v=v, n_loc=n_loc, m_loc=m_loc,
+                             tabs=tabs, axis=axis, sigma=sigma)
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=(P(axis),),
+        out_specs=(P(axis), P(axis), P(axis)))(xg)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "v", "n_loc", "m_loc", "vkey", "axis",
+                              "mesh_holder"))
+def _sm2(xg, sa_rank, *, p, v, n_loc, m_loc, vkey, axis, mesh_holder):
+    mesh = mesh_holder.mesh
+    tabs = cover_tables(v)
+    body = functools.partial(_sm2_body, p=p, v=v, n_loc=n_loc, m_loc=m_loc,
+                             tabs=tabs, axis=axis)
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=(P(axis), P(axis)),
+        out_specs=(P(axis), P(axis)))(xg, sa_rank)
+
+
+class _MeshHolder:
+    """Hashable wrapper so a Mesh can be a static jit arg."""
+
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+
+    def __hash__(self):
+        return hash(tuple(d.id for d in self.mesh.devices.flat)
+                    + tuple(self.mesh.shape.items()))
+
+    def __eq__(self, other):
+        return isinstance(other, _MeshHolder) and hash(self) == hash(other)
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+def _round_cost(label, n_loc, m_loc, p, v, dsize, W, counters):
+    """Analytic per-superstep BSP costs for one SM stage (C4/C5)."""
+    lb = int(math.ceil(math.log2(max(m_loc * 4, 2))))
+    psort = [
+        ("psort/sample_gather", p * (p + 1) * W, m_loc * W * lb),
+        ("psort/a2a_hop1", m_loc * W, m_loc * W),
+        ("psort/a2a_hop2", 2 * m_loc * W, m_loc * W),
+        ("psort/count_gather", p, 2 * m_loc * W * lb),
+        ("psort/rebal_hop1", 2 * m_loc * W, m_loc * W),
+        ("psort/rebal_hop2", m_loc * W, m_loc * W * lb),
+    ]
+    if label == "SM1":
+        steps = ([("halo", v, n_loc)] + psort
+                 + [("rank/boundary", W, m_loc * W), ("rank/scan", p, m_loc),
+                    ("route/a2a_hop1", 3 * m_loc, m_loc),
+                    ("route/a2a_hop2", 3 * m_loc, m_loc)])
+    else:
+        steps = ([("unroute/a2a_hop1", 3 * m_loc, m_loc),
+                  ("unroute/a2a_hop2", 3 * m_loc, m_loc),
+                  ("halo", 2 * v, n_loc)] + psort)
+    for name, h, w in steps:
+        counters.superstep(f"{label}/{name}", h=h, w=w)
+
+
+def suffix_array_bsp(
+    x,
+    mesh: Mesh,
+    axis: str = "bsp",
+    v: int = 3,
+    schedule=accelerated_next_v,
+    base_threshold: int | None = None,
+    counters: BSPCounters = NULL_COUNTERS,
+    pack_keys: bool = True,
+    _n0: int | None = None,
+) -> np.ndarray:
+    """Distributed suffix array of x over a 1-D mesh. Returns np.int32[n]."""
+    x = np.asarray(x)
+    n = int(len(x))
+    p = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    n0 = _n0 or n
+    if base_threshold is None:
+        base_threshold = max(1024, n0 // p)
+    holder = _MeshHolder(mesh)
+    shard = NamedSharding(mesh, P(axis))
+
+    def rec(x_np: np.ndarray, v: int) -> np.ndarray:
+        n = len(x_np)
+        if n <= max(base_threshold, 2 * p * v, 8):
+            # paper: |X'| ≤ n/p → ship to one processor, solve sequentially.
+            counters.superstep("base/gather", h=n, w=n * 4)
+            return suffix_array_jax(x_np, v=3)
+        v = int(min(max(v, 3), n))
+        n_pv, n_loc, m_loc, m_tot, tabs = round_geometry(n, p, v)
+        dsize = len(tabs.D)
+        xp_np = np.full(n_pv, -1, dtype=np.int32)
+        xp_np[:n] = x_np
+        xg = jax.device_put(jnp.asarray(xp_np), shard)
+
+        sigma = int(x_np.max()) + 1 if pack_keys else None
+        xprime, distinct, over = _sm1(
+            xg, p=p, v=v, n_loc=n_loc, m_loc=m_loc, vkey=v, axis=axis,
+            mesh_holder=holder, sigma=sigma)
+        if sigma is not None:            # packed key width (§Perf SA-iter A)
+            bits = max(1, math.ceil(math.log2(max(sigma + 2, 2))))
+            per = max(1, 30 // bits)
+            w_keys = -(-v // per) if per >= 2 else v
+        else:
+            w_keys = v
+        _round_cost("SM1", n_loc, m_loc, p, v, dsize, w_keys + 2, counters)
+        if bool(np.asarray(over).any()):
+            raise RuntimeError("BSP exchange capacity overflow (bug)")
+
+        if bool(np.asarray(distinct).all()):
+            sa_rank = xprime                                  # ranks are final
+        else:
+            v_next = schedule(v, dsize, m_tot)
+            sa_sub = rec(np.asarray(xprime).reshape(-1), v_next)
+            inv = np.empty(m_tot, dtype=np.int32)
+            inv[sa_sub] = np.arange(m_tot, dtype=np.int32)
+            sa_rank = jax.device_put(jnp.asarray(inv), shard)
+
+        sa, over = _sm2(xg, sa_rank, p=p, v=v, n_loc=n_loc, m_loc=m_loc,
+                        vkey=v, axis=axis, mesh_holder=holder)
+        _round_cost("SM2", n_loc, m_loc, p, v, dsize, 3 + v + dsize, counters)
+        if bool(np.asarray(over).any()):
+            raise RuntimeError("BSP exchange capacity overflow (bug)")
+        sa = np.asarray(sa).reshape(-1)
+        return sa[sa < n]                                     # trim pads
+
+    # top-level all-distinct shortcut (recursion base of Algorithm 3)
+    if n <= max(base_threshold, 2 * p * 3, 8):
+        counters.superstep("base/gather", h=n, w=n * 4)
+        return suffix_array_jax(x, v=3).astype(np.int32)
+    return rec(x.astype(np.int32), v).astype(np.int32)

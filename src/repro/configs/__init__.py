@@ -1,0 +1,41 @@
+"""Assigned-architecture registry: --arch <id> resolves here."""
+from __future__ import annotations
+
+from importlib import import_module
+
+ARCH_IDS = [
+    "minicpm_2b",
+    "gemma2_27b",
+    "gemma3_27b",
+    "gemma3_1b",
+    "recurrentgemma_2b",
+    "kimi_k2_1t_a32b",
+    "phi35_moe_42b_a6_6b",
+    "rwkv6_1_6b",
+    "chameleon_34b",
+    "whisper_small",
+    "suffix_array",          # the paper's own workload config
+]
+
+_ALIASES = {
+    "minicpm-2b": "minicpm_2b",
+    "gemma2-27b": "gemma2_27b",
+    "gemma3-27b": "gemma3_27b",
+    "gemma3-1b": "gemma3_1b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b_a6_6b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "chameleon-34b": "chameleon_34b",
+    "whisper-small": "whisper_small",
+}
+
+
+def get_config(arch: str):
+    arch = _ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    mod = import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def model_archs():
+    return [a for a in ARCH_IDS if a != "suffix_array"]

@@ -1,0 +1,15 @@
+"""The paper's own workload: distributed suffix-array construction configs
+(corpus size, v schedule) for benchmarks and the SA dry-run."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class SAConfig:
+    name: str = "suffix-array"
+    n: int = 1 << 20            # corpus length (characters)
+    v0: int = 3
+    schedule: str = "accelerated"   # or "fixed"
+    base_threshold: int = 4096
+
+
+CONFIG = SAConfig()

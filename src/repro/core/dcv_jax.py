@@ -1,0 +1,180 @@
+"""Vectorised single-device JAX DC-v suffix array construction.
+
+Same mathematics as `seq_ref` (difference-cover sampling + Lemma-1
+comparisons), reorganised for the TPU execution model (DESIGN.md §3):
+
+* window encoding + ranking via variadic `lax.sort` (XLA's native sort),
+* the paper's Steps 2–4 fused into ONE comparator-bitonic sort over
+  self-contained payloads
+  `P(i) = (x[i:i+v), rank[i+l] for l ∈ shifts(i mod v), i mod v, i)`,
+  where `shifts(k) = {l : (k+l) mod v ∈ D}`. For any pair, the Lemma-1
+  offset `Λ[k_i][k_j]` lies in both shift sets, so the true suffix order is a
+  strict total order computable from the payloads alone — no remote lookups.
+
+The recursion driver stays in Python (shapes are data-independent functions of
+the schedule), each round body is jitted per-shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bitonic import bitonic_sort, lex_lt_int, next_pow2, sort_rows_with_index
+from .difference_cover import cover_tables
+from .seq_ref import accelerated_next_v
+
+INT32_MAX = np.int32(np.iinfo(np.int32).max)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "steps"))
+def suffix_array_doubling_jax(x: jnp.ndarray, n: int, steps: int) -> jnp.ndarray:
+    """Prefix-doubling base case (Manber–Myers), log n rounds of lax.sort."""
+    idx = jnp.arange(n, dtype=jnp.int32)
+    x = x.astype(jnp.int32)
+
+    def dense_rank(k1, k2):
+        _, _, perm = jax.lax.sort((k1, k2, idx), num_keys=3)
+        s1, s2 = k1[perm], k2[perm]
+        boundary = jnp.ones(n, dtype=jnp.int32)
+        if n > 1:
+            neq = (s1[1:] != s1[:-1]) | (s2[1:] != s2[:-1])
+            boundary = boundary.at[1:].set(neq.astype(jnp.int32))
+        ranks_sorted = jnp.cumsum(boundary) - 1
+        rank = jnp.zeros(n, dtype=jnp.int32).at[perm].set(ranks_sorted)
+        return rank, perm
+
+    rank, perm = dense_rank(x, jnp.zeros_like(x))
+    for s in range(steps):
+        h = 1 << s
+        shifted = jnp.concatenate([rank[h:], jnp.full((min(h, n),), -1, jnp.int32)])[:n]
+        rank, perm = dense_rank(rank, shifted)
+    return perm
+
+
+def _np_sample_positions(n_v: int, v: int, D) -> np.ndarray:
+    per_block = n_v // v
+    return (np.asarray(D, np.int64)[:, None] + np.arange(per_block)[None, :] * v).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("v", "m"))
+def _encode_sample(xp: jnp.ndarray, sample_pos: jnp.ndarray, v: int, m: int):
+    """Step 1 (first half): rank super-characters; X' + distinct flag."""
+    W = xp[sample_pos[:, None] + jnp.arange(v, dtype=jnp.int32)[None, :]]
+    perm = sort_rows_with_index(W, v)
+    Ws = W[perm]
+    boundary = jnp.ones(m, dtype=jnp.int32)
+    if m > 1:
+        boundary = boundary.at[1:].set(
+            jnp.any(Ws[1:] != Ws[:-1], axis=1).astype(jnp.int32))
+    ranks_sorted = jnp.cumsum(boundary) - 1
+    Xp = jnp.zeros(m, dtype=jnp.int32).at[perm].set(ranks_sorted)
+    sa_rank_direct = jnp.zeros(m, dtype=jnp.int32).at[perm].set(
+        jnp.arange(m, dtype=jnp.int32))
+    distinct = jnp.all(boundary == 1)
+    return Xp, distinct, sa_rank_direct
+
+
+@functools.partial(jax.jit, static_argnames=("v", "n_v"))
+def _fused_final_sort(
+    xp: jnp.ndarray,
+    sample_pos: jnp.ndarray,
+    sa_rank: jnp.ndarray,
+    shifts_tab: jnp.ndarray,     # int32[v, |D|]
+    lam_i1: jnp.ndarray,         # int32[v, v]
+    lam_i2: jnp.ndarray,         # int32[v, v]
+    v: int,
+    n_v: int,
+) -> jnp.ndarray:
+    """Fused Steps 2–4: one comparator-bitonic sort of all n_v suffixes."""
+    dsize = shifts_tab.shape[1]
+    rank = jnp.full(n_v + v, -1, dtype=jnp.int32).at[sample_pos].set(sa_rank)
+
+    pos = jnp.arange(n_v, dtype=jnp.int32)
+    chars = xp[pos[:, None] + jnp.arange(v, dtype=jnp.int32)[None, :]]
+    klass = pos % v
+    rvals = rank[pos[:, None] + shifts_tab[klass]]          # [n_v, |D|]
+
+    n2 = next_pow2(n_v)
+    pad = n2 - n_v
+    payload = {
+        "chars": jnp.concatenate(
+            [chars, jnp.full((pad, v), INT32_MAX, jnp.int32)], axis=0),
+        "ranks": jnp.concatenate(
+            [rvals, jnp.zeros((pad, dsize), jnp.int32)], axis=0),
+        "klass": jnp.concatenate(
+            [klass, jnp.zeros((pad,), jnp.int32)], axis=0),
+        "idx": jnp.concatenate(
+            [pos, n_v + jnp.arange(pad, dtype=jnp.int32)], axis=0),
+    }
+
+    def lt_fn(a, b):
+        char_lt, char_eq = lex_lt_int(a["chars"], b["chars"])
+        ka, kb = a["klass"], b["klass"]
+        ra = jnp.take_along_axis(a["ranks"], lam_i1[ka, kb][:, None], axis=1)[:, 0]
+        rb = jnp.take_along_axis(b["ranks"], lam_i2[ka, kb][:, None], axis=1)[:, 0]
+        rank_decides = char_eq & (ra != rb)
+        return jnp.where(
+            rank_decides, ra < rb,
+            jnp.where(char_eq, a["idx"] < b["idx"], char_lt))
+
+    out = bitonic_sort(payload, lt_fn)
+    return out["idx"][:n_v]   # pads carry INT32_MAX chars → sorted last
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _inverse_perm(sa: jnp.ndarray, m: int) -> jnp.ndarray:
+    return jnp.zeros(m, dtype=jnp.int32).at[sa].set(jnp.arange(m, dtype=jnp.int32))
+
+
+def suffix_array_jax(
+    x,
+    v: int = 3,
+    schedule=accelerated_next_v,
+    base_threshold: int = 256,
+) -> np.ndarray:
+    """Suffix array of x (ints ≥ 0) — vectorised JAX DC-v. Returns np.int32[n]."""
+    x = np.asarray(x)
+    n = int(len(x))
+    if n == 0:
+        return np.zeros(0, dtype=np.int32)
+    if n == 1:
+        return np.zeros(1, dtype=np.int32)
+
+    def rec(x_np: np.ndarray, v: int) -> np.ndarray:
+        n = len(x_np)
+        if n <= max(base_threshold, v, 4):
+            steps = max(1, int(np.ceil(np.log2(max(n, 2)))) + 1)
+            return np.asarray(
+                suffix_array_doubling_jax(jnp.asarray(x_np, jnp.int32), n, steps))
+        v = int(min(max(v, 3), n))
+        tabs = cover_tables(v)
+        n_v = v * int(np.ceil(n / v))
+        xp_np = np.full(n_v + 2 * v, -1, dtype=np.int32)
+        xp_np[:n] = x_np
+        xp = jnp.asarray(xp_np)
+        sample_pos_np = _np_sample_positions(n_v, v, tabs.D)
+        sample_pos = jnp.asarray(sample_pos_np, jnp.int32)
+        m = len(sample_pos_np)
+
+        Xp, distinct, sa_rank_direct = _encode_sample(xp, sample_pos, v, m)
+        if bool(distinct):
+            sa_rank = sa_rank_direct
+        else:
+            v_next = schedule(v, len(tabs.D), m)
+            sa_sub = rec(np.asarray(Xp), v_next)
+            sa_rank = _inverse_perm(jnp.asarray(sa_sub, jnp.int32), m)
+
+        sa_full = _fused_final_sort(
+            xp, sample_pos, sa_rank,
+            jnp.asarray(tabs.shifts, jnp.int32),
+            jnp.asarray(tabs.lam_idx1, jnp.int32),
+            jnp.asarray(tabs.lam_idx2, jnp.int32),
+            v, n_v,
+        )
+        sa_full = np.asarray(sa_full)
+        return sa_full[sa_full < n]
+
+    return rec(x.astype(np.int32), v).astype(np.int32)

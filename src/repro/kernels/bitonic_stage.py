@@ -1,0 +1,131 @@
+"""Pallas TPU kernel: one bitonic compare-exchange stage over multi-column
+payload rows (the inner step of the paper's fused Lemma-1 comparator sort,
+DESIGN §3.3).
+
+Stage (k, j): element i exchanges with i^j, ascending iff (i & k) == 0.
+Two tiling regimes:
+  * j >= tile: partners live in different tiles → the grid walks *pairs* of
+    tiles (low tile t, high tile t + j/T); two input refs per program.
+  * j <  tile: partners are inside one tile → single-ref program, partner
+    via in-tile reshape.
+The comparator is lexicographic over the first `num_keys` columns (unrolled
+at trace time — the payload width v + |D| + 3 is a compile-time constant).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lex_lt(a, b, num_keys: int):
+    """Strict lexicographic a < b over [T, W] int32 tiles (unrolled)."""
+    lt = jnp.zeros(a.shape[:-1], jnp.bool_)
+    eq = jnp.ones(a.shape[:-1], jnp.bool_)
+    for c in range(num_keys):
+        ac, bc = a[..., c], b[..., c]
+        lt = lt | (eq & (ac < bc))
+        eq = eq & (ac == bc)
+    return lt
+
+
+def _cross_tile_kernel(low_ref, high_ref, low_out, high_out, *,
+                       k: int, tile: int, num_keys: int, j: int,
+                       n_low_per_run: int):
+    pid = pl.program_id(0)
+    run = pid // n_low_per_run
+    off = pid % n_low_per_run
+    low_tile_idx = run * (2 * n_low_per_run) + off
+    base = low_tile_idx * tile
+    idx = base + jax.lax.broadcasted_iota(jnp.int32, (tile,), 0)
+    up = (idx & k) == 0
+    a = low_ref[...]
+    b = high_ref[...]
+    a_lt_b = _lex_lt(a, b, num_keys)
+    keep = (a_lt_b == up)[:, None]
+    low_out[...] = jnp.where(keep, a, b)
+    high_out[...] = jnp.where(keep, b, a)
+
+
+def _in_tile_kernel(x_ref, out_ref, *, k: int, j: int, tile: int,
+                    num_keys: int):
+    pid = pl.program_id(0)
+    x = x_ref[...]                                       # [tile, W]
+    base = pid * tile
+    idx = base + jax.lax.broadcasted_iota(jnp.int32, (tile,), 0)
+    partner = (idx ^ j) - base                           # in-tile offset
+    other = x[partner]
+    up = (idx & k) == 0
+    lower = (idx & j) == 0
+    lt = _lex_lt(x, other, num_keys)
+    keep = ((lt == lower) == up)[:, None]
+    out_ref[...] = jnp.where(keep, x, other)
+
+
+def bitonic_stage_pallas(rows: jnp.ndarray, k: int, j: int, *,
+                         tile: int = 256, num_keys: int | None = None,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Apply one (k, j) compare-exchange stage. rows int32[N, W], N pow2."""
+    n, W = rows.shape
+    assert n & (n - 1) == 0, n
+    tile = min(tile, n)
+    num_keys = num_keys or W
+    if j >= tile:
+        n_tiles = n // tile
+        j_t = j // tile
+        n_low = n_tiles // 2
+        n_low_per_run = j_t
+
+        def low_map(p):
+            run, off = p // n_low_per_run, p % n_low_per_run
+            return (run * 2 * n_low_per_run + off, 0)
+
+        def high_map(p):
+            run, off = p // n_low_per_run, p % n_low_per_run
+            return (run * 2 * n_low_per_run + off + j_t, 0)
+
+        low, high = pl.pallas_call(
+            functools.partial(_cross_tile_kernel, k=k, tile=tile, j=j,
+                              num_keys=num_keys,
+                              n_low_per_run=n_low_per_run),
+            grid=(n_low,),
+            in_specs=[pl.BlockSpec((tile, W), low_map),
+                      pl.BlockSpec((tile, W), high_map)],
+            out_specs=[pl.BlockSpec((tile, W), low_map),
+                       pl.BlockSpec((tile, W), high_map)],
+            out_shape=[jax.ShapeDtypeStruct((n, W), jnp.int32)] * 2,
+            interpret=interpret,
+        )(rows, rows)
+        # low/high outputs each hold their half; merge by position parity
+        idx = jnp.arange(n) // tile
+        is_low = (idx % (2 * j_t)) < j_t
+        return jnp.where(is_low[:, None], low, high)
+
+    return pl.pallas_call(
+        functools.partial(_in_tile_kernel, k=k, j=j, tile=tile,
+                          num_keys=num_keys),
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((tile, W), lambda p: (p, 0))],
+        out_specs=pl.BlockSpec((tile, W), lambda p: (p, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, W), jnp.int32),
+        interpret=interpret,
+    )(rows)
+
+
+def bitonic_sort_pallas(rows: jnp.ndarray, *, num_keys: int | None = None,
+                        tile: int = 256, interpret: bool = True):
+    """Full sort via repeated stages (tests/bench; the production sort fuses
+    stages in repro.core.bitonic — this kernel is the per-stage hot loop)."""
+    n = rows.shape[0]
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            rows = bitonic_stage_pallas(rows, k, j, tile=tile,
+                                        num_keys=num_keys,
+                                        interpret=interpret)
+            j //= 2
+        k *= 2
+    return rows

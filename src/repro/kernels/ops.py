@@ -1,0 +1,81 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+`interpret=True` executes kernel bodies in Python on CPU (the validation
+mode for this container); on TPU pass interpret=False for compiled Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .bitonic_stage import bitonic_sort_pallas, bitonic_stage_pallas
+from .radix_hist import radix_histogram_pallas
+from .seg_boundary import seg_boundary_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "block", "interpret"))
+def radix_histogram(digits, n_bins: int, block: int = 1024,
+                    interpret: bool = True):
+    """Global histogram: per-block MXU histograms + reduction."""
+    n = digits.shape[0]
+    pad = (-n) % block
+    if pad:
+        digits = jnp.concatenate(
+            [digits, jnp.full((pad,), n_bins, digits.dtype)])
+    per_block = radix_histogram_pallas(digits, n_bins + (1 if pad else 0),
+                                       block=block, interpret=interpret)
+    hist = jnp.sum(per_block, axis=0)
+    return hist[:n_bins]
+
+
+@functools.partial(jax.jit, static_argnames=("num_keys", "block",
+                                             "interpret"))
+def dense_rank_sorted(rows, num_keys: int | None = None, block: int = 512,
+                      interpret: bool = True):
+    """Dense ranks of lexicographically sorted rows [N, W]:
+    kernel computes block-local boundaries/cumsums, wrapper stitches blocks.
+
+    Returns (ranks int32[N], num_distinct int32[])."""
+    n, W = rows.shape
+    num_keys = num_keys or W
+    pad = (-n) % block
+    if pad:
+        filler = jnp.broadcast_to(rows[-1:], (pad, W))
+        rows_p = jnp.concatenate([rows, filler], axis=0)
+    else:
+        rows_p = rows
+    flags, csum, totals = seg_boundary_pallas(
+        rows_p, num_keys=num_keys, block=block, interpret=interpret)
+    nb = rows_p.shape[0] // block
+    # stitch: true cross-block boundary = rows differ across the block edge
+    edge_prev = rows_p[block - 1::block][: nb - 1] if nb > 1 else None
+    base = jnp.cumsum(totals) - totals                 # exclusive block offs
+    if nb > 1:
+        edge_next = rows_p[block::block]
+        same = jnp.ones(nb - 1, jnp.bool_)
+        for c in range(num_keys):
+            same = same & (edge_prev[:, c] == edge_next[:, c])
+        # block b's local flag[0] forced True; if edge rows equal, every rank
+        # inside block b over-counts by 1 from that false boundary.
+        corr = jnp.concatenate([jnp.zeros(1, jnp.int32),
+                                jnp.cumsum(same.astype(jnp.int32))])
+        base = base - corr
+    ranks = (base[:, None] + csum.reshape(nb, block) - 1).reshape(-1)
+    ranks = ranks[:n]
+    return ranks, ranks[-1] + 1
+
+
+@functools.partial(jax.jit, static_argnames=("k", "j", "num_keys", "tile",
+                                             "interpret"))
+def bitonic_stage(rows, k: int, j: int, num_keys: int | None = None,
+                  tile: int = 256, interpret: bool = True):
+    return bitonic_stage_pallas(rows, k, j, tile=tile, num_keys=num_keys,
+                                interpret=interpret)
+
+
+def bitonic_sort(rows, num_keys: int | None = None, tile: int = 256,
+                 interpret: bool = True):
+    return bitonic_sort_pallas(rows, num_keys=num_keys, tile=tile,
+                               interpret=interpret)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the assert_allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def radix_histogram_ref(digits: jnp.ndarray, n_bins: int, block: int):
+    n = digits.shape[0]
+    d = digits.reshape(n // block, block)
+    return jnp.sum(
+        d[:, :, None] == jnp.arange(n_bins, dtype=digits.dtype)[None, None, :],
+        axis=1).astype(jnp.int32)
+
+
+def _lex_lt_ref(a, b, num_keys):
+    lt = jnp.zeros(a.shape[:-1], jnp.bool_)
+    eq = jnp.ones(a.shape[:-1], jnp.bool_)
+    for c in range(num_keys):
+        lt = lt | (eq & (a[..., c] < b[..., c]))
+        eq = eq & (a[..., c] == b[..., c])
+    return lt
+
+
+def bitonic_stage_ref(rows: jnp.ndarray, k: int, j: int,
+                      num_keys: int | None = None):
+    n, W = rows.shape
+    num_keys = num_keys or W
+    idx = jnp.arange(n)
+    partner = idx ^ j
+    other = rows[partner]
+    up = (idx & k) == 0
+    lower = idx < partner
+    lt = _lex_lt_ref(rows, other, num_keys)
+    keep = (lt == lower) == up
+    return jnp.where(keep[:, None], rows, other)
+
+
+def bitonic_sort_ref(rows: jnp.ndarray, num_keys: int | None = None):
+    """Oracle: lexsort by the key columns (requires a strict total order —
+    give rows a unique final key column)."""
+    import numpy as np
+    r = np.asarray(rows)
+    num_keys = num_keys or r.shape[1]
+    order = np.lexsort(tuple(r[:, c] for c in range(num_keys - 1, -1, -1)))
+    return jnp.asarray(r[order])
+
+
+def seg_boundary_ref(rows: jnp.ndarray, num_keys: int | None = None,
+                     block: int = 512):
+    n, W = rows.shape
+    num_keys = num_keys or W
+    prev = jnp.concatenate([rows[:1], rows[:-1]], axis=0)
+    neq = jnp.zeros(n, jnp.bool_)
+    for c in range(num_keys):
+        neq = neq | (rows[:, c] != prev[:, c])
+    nb = n // block
+    neq = neq.reshape(nb, block)
+    neq = neq.at[:, 0].set(True)        # block-local convention
+    neq = neq.at[0, 0].set(True)
+    flags = neq.reshape(-1).astype(jnp.int32)
+    csum = jnp.cumsum(neq, axis=1).reshape(-1).astype(jnp.int32)
+    totals = jnp.sum(neq, axis=1).astype(jnp.int32)
+    return flags, csum, totals

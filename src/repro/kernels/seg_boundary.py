@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: segment boundaries + in-block prefix sums over sorted
+rows — the dense-ranking step after every sort (paper steps 1 & 3).
+
+Per block of T rows: flag[i] = any(row[i] != row[i-1]) (block-local; the
+wrapper stitches the T-boundaries), plus the block-inclusive cumsum of flags
+and the block total, so the wrapper finishes global dense ranks with one tiny
+exclusive scan over block totals.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _seg_kernel(rows_ref, flags_ref, csum_ref, total_ref, *, num_keys: int):
+    x = rows_ref[...]                                    # [T, W]
+    prev = jnp.concatenate([x[:1], x[:-1]], axis=0)
+    neq = jnp.zeros(x.shape[0], jnp.bool_)
+    for c in range(num_keys):
+        neq = neq | (x[:, c] != prev[:, c])
+    # block-local convention: the first row of every block is a boundary;
+    # the wrapper stitches true cross-block boundaries.
+    neq = neq.at[0].set(True)
+    flags = neq.astype(jnp.int32)
+    flags_ref[...] = flags
+    cs = jnp.cumsum(flags)
+    csum_ref[...] = cs.astype(jnp.int32)
+    total_ref[...] = cs[-1:].astype(jnp.int32)
+
+
+def seg_boundary_pallas(rows: jnp.ndarray, num_keys: int | None = None,
+                        block: int = 512, interpret: bool = True):
+    """rows int32[N, W] sorted → (flags int32[N], csum int32[N],
+    totals int32[N//block]). N multiple of block."""
+    n, W = rows.shape
+    assert n % block == 0
+    num_keys = num_keys or W
+    grid = (n // block,)
+    return pl.pallas_call(
+        functools.partial(_seg_kernel, num_keys=num_keys),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block, W), lambda p: (p, 0))],
+        out_specs=[pl.BlockSpec((block,), lambda p: (p,)),
+                   pl.BlockSpec((block,), lambda p: (p,)),
+                   pl.BlockSpec((1,), lambda p: (p,))],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32),
+                   jax.ShapeDtypeStruct((n // block,), jnp.int32)],
+        interpret=interpret,
+    )(rows)

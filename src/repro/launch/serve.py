@@ -1,0 +1,86 @@
+"""Batched serving loop: prefill a batch of prompts, then decode with
+ring-buffer KV caches / recurrent states.
+
+    python -m repro.launch.serve --arch rwkv6-1.6b --smoke --prompt-len 16 \\
+        --gen 32 --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..models.layers import logits_from_embedding
+from ..models.lm import (decode_step, encode, forward_hidden,
+                         init_decode_states, lm_init)
+
+
+def prefill_then_decode(params, cfg, prompts, gen: int, *, enc_out=None,
+                        temperature: float = 0.0, seed: int = 0):
+    """prompts int32[B, P] → tokens int32[B, P+gen]. Prefill runs stepwise
+    through the decode path (correct for every layer family incl. ring
+    buffers); production TPU serving would batch the prompt pass."""
+    B, P = prompts.shape
+    states = init_decode_states(cfg, B, cache_len=P + gen)
+    step = jax.jit(lambda p, t, st, pos: decode_step(
+        p, cfg, t, st, pos, enc_out=enc_out))
+    key = jax.random.PRNGKey(seed)
+    out = [prompts[:, i:i + 1] for i in range(P)]
+    logits = None
+    for t in range(P):
+        logits, states = step(params, out[t], states, jnp.int32(t))
+    for g in range(gen):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits[:, 0] / temperature,
+                                         axis=-1)[:, None]
+        else:
+            nxt = jnp.argmax(logits[:, 0], axis=-1)[:, None]
+        out.append(nxt.astype(jnp.int32))
+        logits, states = step(params, out[-1], states, jnp.int32(P + g))
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    params, _ = lm_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+    enc_out = None
+    if cfg.is_encdec:
+        enc = 0.02 * rng.standard_normal(
+            (args.batch, cfg.enc_seq, cfg.d_model)).astype(np.float32)
+        enc_out = encode(params, cfg, jnp.asarray(enc))
+
+    t0 = time.time()
+    toks = prefill_then_decode(params, cfg, prompts, args.gen,
+                               enc_out=enc_out,
+                               temperature=args.temperature)
+    dt = time.time() - t0
+    n_new = args.batch * args.gen
+    print(f"generated {n_new} tokens in {dt:.2f}s "
+          f"({n_new / dt:.1f} tok/s batched)")
+    print("sample:", np.asarray(toks[0])[:32].tolist())
+    assert toks.shape == (args.batch, args.prompt_len + args.gen)
+    return toks
+
+
+if __name__ == "__main__":
+    main()

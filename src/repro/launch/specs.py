@@ -1,0 +1,181 @@
+"""ShapeDtypeStruct input specs + sharding assignment for every
+(architecture × input shape) dry-run cell — weak-type-correct, shardable,
+zero device allocation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import SHAPES, ModelConfig, ShapeConfig
+from ..models.layers import COMPUTE_DTYPE
+from ..models.lm import init_decode_states, lm_init
+from ..models.sharding import ShardingRules, logical_to_sharding
+from ..train.optim import OptConfig
+from ..train.train_step import TrainConfig, make_train_state
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype, sharding=sharding)
+
+
+# --------------------------------------------------------------------------
+# params + optimizer state (abstract)
+# --------------------------------------------------------------------------
+def abstract_params(cfg: ModelConfig):
+    params, axes = lm_init(jax.random.PRNGKey(0), cfg, abstract=True)
+    return params, axes
+
+
+def params_shardings(axes, mesh: Mesh, rules: ShardingRules, params_abs=None):
+    return logical_to_sharding(axes, mesh, rules, tree_abs=params_abs)
+
+
+def opt_state_shardings(params_shard, params_abs, opt_name: str, mesh: Mesh):
+    """Structural sharding for optimizer state given param shardings."""
+    rep = NamedSharding(mesh, P())
+
+    if opt_name in ("adamw", "sgdm"):
+        out = {"m": params_shard, "step": rep}
+        if opt_name == "adamw":
+            out["v"] = params_shard
+        return out
+
+    # adafactor: vr drops the last dim, vc drops the second-last
+    def fac(sh: NamedSharding, p_abs):
+        spec = tuple(sh.spec) + (None,) * (len(p_abs.shape) - len(tuple(sh.spec)))
+        if len(p_abs.shape) >= 2:
+            return {"vr": NamedSharding(mesh, P(*spec[:-1])),
+                    "vc": NamedSharding(mesh, P(*(spec[:-2] + spec[-1:])))}
+        return {"v": NamedSharding(mesh, P(*spec))}
+
+    f = jax.tree_util.tree_map(fac, params_shard, params_abs)
+    return {"f": f, "step": rep}
+
+
+def abstract_train_state(cfg: ModelConfig, tcfg: TrainConfig):
+    params, axes = abstract_params(cfg)
+    state = jax.eval_shape(lambda p: make_train_state(p, tcfg), params)
+    return state, axes
+
+
+def train_state_shardings(cfg, tcfg, state_abs, axes, mesh, rules):
+    p_shard = params_shardings(axes, mesh, rules, state_abs["params"])
+    out = {"params": p_shard,
+           "opt": opt_state_shardings(p_shard, state_abs["params"],
+                                      tcfg.opt.name, mesh)}
+    if "ef_error" in state_abs:
+        out["ef_error"] = p_shard
+    return out
+
+
+# --------------------------------------------------------------------------
+# batch / decode-state specs
+# --------------------------------------------------------------------------
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    dp = dp_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    toks = sds((B, S + 1), jnp.int32, NamedSharding(mesh, P(dp, None)))
+    batch = {"tokens": toks}
+    if cfg.is_encdec:
+        batch["enc_embeds"] = sds((B, cfg.enc_seq, cfg.d_model), jnp.float32,
+                                  NamedSharding(mesh, P(dp, None, None)))
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    dp = dp_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((B, S), jnp.int32,
+                           NamedSharding(mesh, P(dp, None)))}
+    if cfg.is_encdec:
+        batch["enc_embeds"] = sds((B, cfg.enc_seq, cfg.d_model), jnp.float32,
+                                  NamedSharding(mesh, P(dp, None, None)))
+    return batch
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """Abstract decode states with shape-dependent sharding:
+    batch over dp when B > 1, cache-seq over `data` when B == 1 (the
+    long_500k sequence-parallel layout, DESIGN §6)."""
+    dp = dp_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    states = jax.eval_shape(
+        lambda: init_decode_states(cfg, B, cache_len=S))
+    seq_shard = B == 1
+
+    def shard_of(leaf):
+        shp = leaf.shape
+        # stacked leaves: [L?, B, ...] — detect the batch dim position
+        spec = [None] * len(shp)
+        bdim = 1 if (len(shp) >= 2 and shp[1] == B) else 0
+        if shp[bdim] != B:
+            return NamedSharding(mesh, P())
+        if not seq_shard and B % max(
+                int(np.prod([mesh.shape[a] for a in dp])), 1) == 0 and dp:
+            spec[bdim] = dp
+        # KV caches: [..., B, C, Hk, hd] — shard heads over model; when the
+        # head count does not divide the axis (GQA kv ≤ 16), fall back to
+        # sharding the cache length C over model (§Perf iteration 2: minicpm
+        # decode_32k had 98 GB/device of unsharded KV cache).
+        if len(shp) - bdim == 4:                       # B, C, H, hd
+            if shp[bdim + 2] % mesh.shape["model"] == 0:
+                spec[bdim + 2] = "model"
+            elif shp[bdim + 1] % mesh.shape["model"] == 0:
+                spec[bdim + 1] = "model"
+            if seq_shard and "data" in mesh.axis_names and \
+                    spec[bdim + 1] is None and \
+                    shp[bdim + 1] % mesh.shape["data"] == 0:
+                spec[bdim + 1] = "data"
+        elif len(shp) - bdim == 3:                     # rwkv S: B, H, hd, hd?
+            if shp[bdim + 1] % mesh.shape["model"] == 0:
+                spec[bdim + 1] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    shardings = jax.tree_util.tree_map(shard_of, states)
+    with_sh = jax.tree_util.tree_map(
+        lambda l, sh: sds(l.shape, l.dtype, sh), states, shardings)
+    return with_sh, shardings
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    dp = dp_axes(mesh)
+    B = shape.global_batch
+    bspec = P(dp, None) if B > 1 else P(None, None)
+    out = {"token": sds((B, 1), jnp.int32, NamedSharding(mesh, bspec)),
+           "cur_pos": sds((), jnp.int32, NamedSharding(mesh, P()))}
+    if cfg.is_encdec:
+        out["enc_out"] = sds((B, cfg.enc_seq, cfg.d_model), COMPUTE_DTYPE,
+                             NamedSharding(mesh, P(dp if B > 1 else None,
+                                                   None, None)))
+    return out
+
+
+def default_train_config(cfg: ModelConfig) -> TrainConfig:
+    # remat="full" recomputes blocks in backward: activation footprint drops
+    # from O(L·B·S·d·intermediates) to O(L·B·S·d) (§Perf iteration 6).
+    return TrainConfig(
+        opt=OptConfig(name=cfg.optimizer, lr=3e-4),
+        schedule=cfg.lr_schedule,
+        warmup=2000, total_steps=100_000,
+        microbatches=1, remat="none")   # remat lives INSIDE the model
+                                           # (per-layer, cfg.remat)
+
+
+# which cells run (DESIGN §5 applicability table)
+LONG_OK = {"gemma2-27b", "gemma3-27b", "gemma3-1b", "recurrentgemma-2b",
+           "rwkv6-1.6b"}
+
+
+def cell_runs(cfg: ModelConfig, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return cfg.name in LONG_OK
+    return True

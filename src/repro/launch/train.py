@@ -1,0 +1,108 @@
+"""Training launcher.
+
+    python -m repro.launch.train --arch minicpm-2b --smoke --steps 50
+    python -m repro.launch.train --arch gemma3-1b --smoke --steps 200 \\
+        --ckpt-dir /tmp/ckpt --resume
+
+--smoke runs the reduced same-family config on CPU; without it the full
+config is used (real cluster). Checkpoints every --ckpt-every steps with an
+async writer; --resume continues from the latest committed step with
+deterministic data skip-ahead (fault-tolerance path).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from ..configs import get_config
+from ..ckpt.checkpoint import (latest_step, restore_checkpoint,
+                               save_checkpoint, wait_for_async)
+from ..data.pipeline import PipelineConfig, TokenPipeline, synthetic_corpus
+from ..models.lm import lm_init
+from ..train.optim import OptConfig
+from ..train.train_step import (TrainConfig, make_train_state,
+                                make_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--dedup", action="store_true",
+                    help="suffix-array dedup stage in the data pipeline")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--corpus-chars", type=int, default=200_000)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    tcfg = TrainConfig(
+        opt=OptConfig(name=cfg.optimizer, lr=args.lr),
+        schedule=cfg.lr_schedule, warmup=max(args.steps // 20, 1),
+        total_steps=args.steps, microbatches=args.microbatches)
+
+    pipe = TokenPipeline(
+        synthetic_corpus(args.corpus_chars, vocab=min(cfg.vocab_size, 256),
+                         dup_fraction=0.2 if args.dedup else 0.0),
+        PipelineConfig(seq_len=args.seq_len, global_batch=args.batch,
+                       dedup=args.dedup))
+    if pipe.dedup_report:
+        print(f"dedup: removed {pipe.dedup_report.dup_chars} duplicate chars "
+              f"({100 * pipe.dedup_report.dup_fraction:.1f}%)")
+
+    params, _ = lm_init(jax.random.PRNGKey(0), cfg)
+    state = make_train_state(params, tcfg)
+    start = 0
+    if args.resume and args.ckpt_dir:
+        st = latest_step(args.ckpt_dir)
+        if st is not None:
+            state, extras = restore_checkpoint(args.ckpt_dir, st, state)
+            start = st
+            print(f"resumed from step {st}")
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    pending = None
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = pipe.batch_at(i)
+        if cfg.is_encdec:
+            rng = np.random.default_rng(i)
+            batch["enc_embeds"] = 0.02 * rng.standard_normal(
+                (args.batch, cfg.enc_seq, cfg.d_model)).astype(np.float32)
+        if args.microbatches > 1:
+            B = args.batch // args.microbatches
+            batch = {k: v.reshape((args.microbatches, B) + v.shape[1:])
+                     for k, v in batch.items()}
+        state, m = step_fn(state, batch)
+        if (i + 1) % args.log_every == 0 or i == start:
+            dt = (time.time() - t0) / max(i + 1 - start, 1)
+            print(f"step {i+1:5d} loss {float(m['loss']):.4f} "
+                  f"lr {float(m['lr']):.2e} gnorm {float(m['grad_norm']):.2f}"
+                  f" ({dt:.2f}s/step)", flush=True)
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            wait_for_async(pending)
+            pending = save_checkpoint(args.ckpt_dir, i + 1, state,
+                                      extras={"loss": float(m["loss"])},
+                                      async_write=True)
+    wait_for_async(pending)
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps, state)
+    print(f"done: final loss {float(m['loss']):.4f}")
+    return float(m["loss"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,303 @@
+"""GQA attention: flash-style blocked softmax (train/prefill), ring-buffer KV
+caches (decode), sliding-window local layers, gemma-style softcaps, qk-norm.
+
+The blocked implementation never materialises the [S, T] score matrix: it
+scans query chunks and, per query chunk, only the causally/window reachable
+KV chunks — this is what makes prefill_32k memory-sane and local layers at
+long context O(S·window).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import COMPUTE_DTYPE, apply_rope, rms_norm, softcap
+
+NEG_INF = -1e30
+
+
+def _chunk(x, n):  # [B, S, ...] -> [B, nchunks, n, ...]
+    B, S = x.shape[:2]
+    return x.reshape((B, S // n, n) + x.shape[2:])
+
+
+def flash_attention(
+    q,                      # [B, S, H, hd]
+    k,                      # [B, T, Hk, hd]
+    v,                      # [B, T, Hk, hd]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    attn_softcap: float | None = None,
+    q_offset: int = 0,      # absolute position of q[0] (prefill continuation)
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+):
+    B, S, H, hd = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, T)
+    S_true, T_true = S, T
+    # pad to chunk multiples; padded kv is masked out, padded q is dropped
+    if S % qc:
+        pad = qc - S % qc
+        q = jnp.concatenate([q, jnp.zeros((B, pad, H, hd), q.dtype)], axis=1)
+        S += pad
+    if T % kc:
+        pad = kc - T % kc
+        k = jnp.concatenate([k, jnp.zeros((B, pad, Hk, hd), k.dtype)], axis=1)
+        v = jnp.concatenate([v, jnp.zeros((B, pad, Hk, hd), v.dtype)], axis=1)
+        T += pad
+    nq, nk = S // qc, T // kc
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = _chunk(q, qc).reshape(B, nq, qc, Hk, G, hd)
+    kg = _chunk(k, kc)                                  # [B, nk, kc, Hk, hd]
+    vg = _chunk(v, kc)
+
+    # static chunk window: how many kv chunks back a q chunk can see
+    if window is not None:
+        back = int(math.ceil(window / kc)) + 1
+    else:
+        back = nk
+
+    banded = window is not None and back < nk
+
+    def _score_block(qblk, kblk, vblk, q_pos, kv_pos, extra_ok=None):
+        """qblk [B,qc,Hk,G,hd]; kblk/vblk [B,C,Hk,hd] → (s, ok)."""
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qblk.astype(COMPUTE_DTYPE),
+                       kblk.astype(COMPUTE_DTYPE),
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, attn_softcap)
+        ok = jnp.broadcast_to((kv_pos < T_true)[None, :],
+                              (qc, kv_pos.shape[0])).copy() if T != T_true \
+            else jnp.ones((qc, kv_pos.shape[0]), bool)
+        if causal:
+            ok &= q_pos[:, None] >= kv_pos[None, :]
+        if window is not None:
+            ok &= (q_pos[:, None] - kv_pos[None, :]) < window
+        if extra_ok is not None:
+            ok &= extra_ok[None, :]
+        return jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+
+    def q_body(_, qi):
+        qblk = qg[:, qi]                                # [B, qc, Hk, G, hd]
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        if banded:
+            # sliding window: gather the `back` reachable kv chunks and do a
+            # single softmax over the band — zero wasted FLOPs, fully
+            # differentiable (no dynamic control flow).
+            rel = qi - (back - 1) + jnp.arange(back)    # chunk ids [b]
+            relc = jnp.clip(rel, 0, nk - 1)
+            kb = kg[:, relc].reshape(B, back * kc, Hk, hd)
+            vb = vg[:, relc].reshape(B, back * kc, Hk, hd)
+            kv_pos = (rel[:, None] * kc + jnp.arange(kc)[None, :]).reshape(-1)
+            in_range = (rel >= 0).repeat(kc)
+            s = _score_block(qblk, kb, vb, q_pos, kv_pos, in_range)
+            p = jax.nn.softmax(s, axis=-1)
+            out = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(COMPUTE_DTYPE),
+                             vb.astype(COMPUTE_DTYPE),
+                             preferred_element_type=jnp.float32)
+            return None, out.reshape(B, qc, H, hd).astype(q.dtype)
+
+        # causal global: online softmax over kv chunks; irrelevant chunks are
+        # skipped with lax.cond (runtime-skipped AND reverse-differentiable).
+        m0 = jnp.full((B, qc, Hk, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, qc, Hk, G), jnp.float32)
+        a0 = jnp.zeros((B, qc, Hk, G, hd), jnp.float32)
+        hi_pos = q_offset + (qi + 1) * qc if causal else T
+        hi = jnp.minimum((hi_pos + kc - 1) // kc, nk) if causal else nk
+
+        def kv_body(carry, ki):
+            def active(c):
+                m, l, acc = c
+                kblk = jax.lax.dynamic_index_in_dim(kg, ki, 1, keepdims=False)
+                vblk = jax.lax.dynamic_index_in_dim(vg, ki, 1, keepdims=False)
+                kv_pos = ki * kc + jnp.arange(kc)
+                s = _score_block(qblk, kblk, vblk, q_pos, kv_pos)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                acc = acc * corr[..., None] + jnp.einsum(
+                    "bqkgc,bckd->bqkgd", p.astype(COMPUTE_DTYPE),
+                    vblk.astype(COMPUTE_DTYPE),
+                    preferred_element_type=jnp.float32)
+                return m_new, l_new, acc
+            relevant = ki < hi
+            return jax.lax.cond(relevant, active, lambda c: c, carry), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.reshape(B, qc, H, hd).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, jnp.arange(nq))
+    out = outs.swapaxes(0, 1).reshape(B, S, H, hd)
+    return out[:, :S_true]                              # [B, S, H, hd]
+
+
+def decode_attention(
+    q,                      # [B, 1, H, hd]
+    cache_k,                # [B, C, Hk, hd]
+    cache_v,
+    cur_pos,                # int32[] — absolute position of the new token
+    *,
+    window: int | None = None,
+    attn_softcap: float | None = None,
+):
+    B, _, H, hd = q.shape
+    C, Hk = cache_k.shape[1], cache_k.shape[2]
+    G = H // Hk
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Hk, G, hd)
+    s = jnp.einsum("bkgd,bckd->bkgc", qg.astype(COMPUTE_DTYPE),
+                   cache_k.astype(COMPUTE_DTYPE),
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, attn_softcap)
+    # ring buffer: slot c holds position cur - ((cur - c) mod C)
+    slots = jnp.arange(C)
+    pos_of_slot = cur_pos - ((cur_pos - slots) % C)
+    ok = (pos_of_slot >= 0) & (pos_of_slot <= cur_pos)
+    if window is not None:
+        ok &= (cur_pos - pos_of_slot) < window
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", p.astype(COMPUTE_DTYPE),
+                     cache_v.astype(COMPUTE_DTYPE),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def update_cache(cache_k, cache_v, k_new, v_new, cur_pos):
+    """Ring-buffer write of one position. k_new [B, 1, Hk, hd]."""
+    C = cache_k.shape[1]
+    slot = cur_pos % C
+    cache_k = jax.lax.dynamic_update_index_in_dim(cache_k, k_new[:, 0], slot, 1)
+    cache_v = jax.lax.dynamic_update_index_in_dim(cache_v, v_new[:, 0], slot, 1)
+    return cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# full attention layer (projections + rope + flash/decode)
+# --------------------------------------------------------------------------
+def init_attention(col, prefix: str, cfg):
+    hd = cfg.hd
+    col.param(f"{prefix}.wq", (cfg.d_model, cfg.n_heads, hd),
+              ("embed_fsdp", "heads", "head_dim"),
+              scale=0.02)
+    col.param(f"{prefix}.wk", (cfg.d_model, cfg.n_kv_heads, hd),
+              ("embed_fsdp", "kv_heads", "head_dim"), scale=0.02)
+    col.param(f"{prefix}.wv", (cfg.d_model, cfg.n_kv_heads, hd),
+              ("embed_fsdp", "kv_heads", "head_dim"), scale=0.02)
+    col.param(f"{prefix}.wo", (cfg.n_heads, hd, cfg.d_model),
+              ("heads", "head_dim", "embed_fsdp"),
+              scale=0.02 / np.sqrt(2 * cfg.n_layers))
+    if cfg.qk_norm:
+        col.param(f"{prefix}.q_norm", (hd,), ("head_dim",), init="zeros")
+        col.param(f"{prefix}.k_norm", (hd,), ("head_dim",), init="zeros")
+
+
+def attention_layer(
+    p, cfg, x, *, is_local: bool, positions=None, cache=None, cur_pos=None,
+    kv_override=None, causal: bool = True, mesh=None,
+):
+    """x [B, S, d]. Returns (out [B, S, d], new_cache).
+
+    cache: None (training/prefill) or dict(k, v) ring buffers (decode, S=1).
+    kv_override: (k, v) for cross-attention (encoder outputs).
+    """
+    B, S, _ = x.shape
+    hd = cfg.hd
+    window = cfg.window if is_local else None
+    rope_base = (cfg.rope_base_local if (is_local and cfg.rope_base_local)
+                 else cfg.rope_base)
+
+    from .lm import constrain_act
+
+    def qkv_spec(t):
+        """Attention sharding strategy (§Perf iteration 5): prefer heads
+        over `model` (zero reshard traffic); when the head count doesn't
+        divide (minicpm 36H, whisper 12H), shard batch over dp×model so the
+        model axis isn't doing redundant attention; else dp only."""
+        if mesh is None:
+            return t
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        mdl = "model" if "model" in mesh.axis_names else None
+        if not dp and not mdl:
+            return t
+        msz = mesh.shape[mdl] if mdl else 1
+        dpsz = 1
+        for a in dp:
+            dpsz *= mesh.shape[a]
+        B, H = t.shape[0], t.shape[2]
+        heads_ok = (cfg.n_heads % msz == 0 and cfg.n_kv_heads % msz == 0) \
+            if mdl else False
+        if heads_ok and H % msz == 0:
+            spec = P(dp or None, None, mdl, None)
+        elif mdl and B % (dpsz * msz) == 0:
+            spec = P(tuple(dp) + (mdl,), None, None, None)
+        elif dp and B % dpsz == 0:
+            spec = P(dp, None, None, None)
+        else:
+            return t
+        return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype),
+                   preferred_element_type=COMPUTE_DTYPE)
+    q = qkv_spec(q)
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype),
+                       preferred_element_type=COMPUTE_DTYPE)
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype),
+                       preferred_element_type=COMPUTE_DTYPE)
+        k = qkv_spec(k)
+        v = qkv_spec(v)
+    else:
+        k, v = kv_override
+
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if positions is None:
+        positions = jnp.arange(S)[None, :] if cur_pos is None \
+            else jnp.full((B, S), cur_pos)
+    if kv_override is None and rope_base:
+        q = apply_rope(q, positions, rope_base)
+        k = apply_rope(k, positions, rope_base)
+
+    new_cache = None
+    if cache is not None:                      # decode: S == 1
+        ck, cv = update_cache(cache["k"], cache["v"], k, v, cur_pos)
+        new_cache = {"k": ck, "v": cv}
+        out = decode_attention(q, ck, cv, cur_pos, window=window,
+                               attn_softcap=cfg.attn_softcap)
+    elif kv_override is not None:
+        flash = jax.checkpoint(functools.partial(
+            flash_attention, causal=False, window=None,
+            attn_softcap=cfg.attn_softcap))
+        out = flash(q, k, v)
+    else:
+        # remat the streaming softmax: backward recomputes score blocks
+        # instead of saving O(S²) intermediates (flash-attention semantics;
+        # §Perf iteration 1 — before: ~99 TB/device activations on
+        # minicpm train_4k, after: O(S·d)).
+        flash = jax.checkpoint(functools.partial(
+            flash_attention, causal=causal, window=window,
+            attn_softcap=cfg.attn_softcap))
+        out = flash(q, k, v)
+
+    # bf16 output => the TP all-reduce of the partial sums runs in bf16
+    # (half the collective bytes; §Perf iteration 7)
+    proj = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(out.dtype),
+                      preferred_element_type=COMPUTE_DTYPE)
+    proj = constrain_act(proj, mesh)
+    return proj, new_cache

@@ -1,0 +1,110 @@
+"""Core layers: norms, activations, RoPE, embeddings, chunked cross-entropy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def softcap(x, cap: float | None):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, base: float):
+    return base ** (-np.arange(0, head_dim, 2, dtype=np.float32) / head_dim)
+
+
+def apply_rope(x, positions, base: float):
+    """x [..., S, H, hd]; positions [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, base))          # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding / loss
+# --------------------------------------------------------------------------
+def embed(tokens, table, scale_by_dim: bool = True):
+    out = table[tokens]
+    if scale_by_dim:
+        out = out * jnp.asarray(np.sqrt(table.shape[-1]), out.dtype)
+    return out.astype(COMPUTE_DTYPE)
+
+
+def logits_from_embedding(x, table, cap: float | None = None):
+    out = jnp.einsum("...sd,vd->...sv", x, table.astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    return softcap(out, cap)
+
+
+def chunked_softmax_xent(x, table, targets, mask=None, *, chunk: int = 512,
+                         cap: float | None = None):
+    """Cross-entropy without materialising [B, S, V] for the full sequence.
+
+    Scans over S in chunks; each chunk computes logits, log-sum-exp, and the
+    target logit. Returns (mean_loss, total_weight)."""
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    n_chunks = S // chunk
+    rem = S - n_chunks * chunk
+    if mask is None:
+        mask = jnp.ones((B, S), dtype=jnp.float32)
+
+    def chunk_loss(xc, tc, mc):
+        logits = logits_from_embedding(xc, table, cap)      # [B, c, V] f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # target logit via embedding-ROW gather (cheap [B,c,D] gather) — a
+        # take_along_axis over the vocab-sharded logits axis would force
+        # XLA to all-gather full-vocab logits per device (§Perf iter. 3:
+        # that was 6.6e15 of 6.7e15 per-device FLOPs on minicpm train_4k).
+        tgt_emb = table[tc]                                 # [B, c, D]
+        tgt = jnp.einsum("bcd,bcd->bc", xc.astype(jnp.float32),
+                         tgt_emb.astype(jnp.float32))
+        tgt = softcap(tgt, cap)
+        return jnp.sum((lse - tgt) * mc), jnp.sum(mc)
+
+    def body(carry, args):
+        tot, wt = carry
+        xc, tc, mc = args
+        l, w = chunk_loss(xc, tc, mc)
+        return (tot + l, wt + w), None
+
+    xs = (x[:, :n_chunks * chunk].reshape(B, n_chunks, chunk, D).swapaxes(0, 1),
+          targets[:, :n_chunks * chunk].reshape(B, n_chunks, chunk).swapaxes(0, 1),
+          mask[:, :n_chunks * chunk].reshape(B, n_chunks, chunk).swapaxes(0, 1))
+    (tot, wt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), xs)
+    if rem:
+        l, w = chunk_loss(x[:, -rem:], targets[:, -rem:], mask[:, -rem:])
+        tot, wt = tot + l, wt + w
+    return tot / jnp.maximum(wt, 1.0), wt

@@ -1,0 +1,366 @@
+"""LM assembly: pattern-period scan-over-layers decoder (+ optional encoder),
+covering all 10 assigned architectures through ModelConfig.pattern:
+
+  "g" global attention · "l" sliding-window attention · "r" RG-LRU block ·
+  "w" RWKV6 time-mix (+ channel-mix MLP) · encoder layers are bidirectional.
+
+Layers are grouped into repeating periods (e.g. gemma3: l,l,l,l,l,g) and
+scanned over ⌊L/P⌋ periods with stacked params — HLO size is ~depth-
+independent, which keeps the 70-compile dry-run tractable (DESIGN §7).
+Remainder layers (L mod P) get unstacked "tail" params.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .attention import attention_layer, init_attention
+from .config import ModelConfig
+from .ffn import init_mlp, init_moe, mlp_layer, moe_layer
+from .layers import (COMPUTE_DTYPE, chunked_softmax_xent, embed,
+                     logits_from_embedding, rms_norm, softcap)
+from .rglru import init_rglru, init_rglru_state, rglru_layer
+from .rwkv6 import (init_rwkv_channel_mix, init_rwkv_state,
+                    init_rwkv_time_mix, rwkv_channel_mix, rwkv_time_mix)
+from .sharding import ParamCollector
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+class _Stacked:
+    """Collector proxy that prepends a layer-stack dim to every param."""
+
+    def __init__(self, col: ParamCollector, n: int, abstract: bool):
+        self.col, self.n, self.abstract = col, n, abstract
+
+    def param(self, path, shape, axes, **kw):
+        shape = (self.n,) + tuple(shape)
+        axes = ("layers",) + tuple(axes)
+        if self.abstract:
+            self.col.abstract_param(path, shape, axes,
+                                    dtype=kw.get("dtype", jnp.float32))
+        else:
+            self.col.param(path, shape, axes, **kw)
+
+
+class _Plain:
+    def __init__(self, col: ParamCollector, abstract: bool):
+        self.col, self.abstract = col, abstract
+
+    def param(self, path, shape, axes, **kw):
+        if self.abstract:
+            self.col.abstract_param(path, shape, axes,
+                                    dtype=kw.get("dtype", jnp.float32))
+        else:
+            self.col.param(path, shape, axes, **kw)
+
+
+def _init_block(col, prefix: str, cfg: ModelConfig, kind: str,
+                cross: bool = False):
+    col.param(f"{prefix}.norm1", (cfg.d_model,), ("embed",), init="zeros")
+    col.param(f"{prefix}.norm2", (cfg.d_model,), ("embed",), init="zeros")
+    if cfg.sandwich_norm:
+        col.param(f"{prefix}.post1", (cfg.d_model,), ("embed",), init="zeros")
+        col.param(f"{prefix}.post2", (cfg.d_model,), ("embed",), init="zeros")
+    if kind in ("g", "l", "b"):
+        init_attention(col, f"{prefix}.attn", cfg)
+    elif kind == "r":
+        init_rglru(col, f"{prefix}.rnn", cfg)
+    elif kind == "w":
+        init_rwkv_time_mix(col, f"{prefix}.tmix", cfg)
+    else:
+        raise ValueError(kind)
+    if cross:
+        col.param(f"{prefix}.norm_x", (cfg.d_model,), ("embed",), init="zeros")
+        init_attention(col, f"{prefix}.xattn", cfg)
+    if kind == "w":
+        init_rwkv_channel_mix(col, f"{prefix}.cmix", cfg)
+    elif cfg.is_moe:
+        init_moe(col, f"{prefix}.moe", cfg)
+    else:
+        init_mlp(col, f"{prefix}.mlp", cfg)
+
+
+def lm_init(key, cfg: ModelConfig, abstract: bool = False):
+    """Returns (params, logical_axes) pytrees."""
+    col = ParamCollector(key)
+    plain = _Plain(col, abstract)
+    P = len(cfg.pattern)
+    n_full, rem = cfg.n_layers // P, cfg.n_layers % P
+    dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+    plain.param("embed", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                scale=cfg.d_model ** -0.5, dtype=dtype)
+    stk = _Stacked(col, n_full, abstract)
+    for j, kind in enumerate(cfg.pattern):
+        _init_block(stk, f"blocks.l{j}", cfg, kind, cross=cfg.is_encdec)
+    for j in range(rem):
+        _init_block(plain, f"tail.l{j}", cfg, cfg.pattern[j],
+                    cross=cfg.is_encdec)
+    plain.param("final_norm", (cfg.d_model,), ("embed",), init="zeros")
+
+    if cfg.is_encdec:
+        enc_stk = _Stacked(col, cfg.encoder_layers, abstract)
+        _init_block(enc_stk, "enc.l0", cfg, "b", cross=False)
+        plain.param("enc_norm", (cfg.d_model,), ("embed",), init="zeros")
+    return col.params, col.axes
+
+
+# --------------------------------------------------------------------------
+# one block
+# --------------------------------------------------------------------------
+def constrain_act(x, mesh, *, shard_batch=True):
+    """Pin activation sharding [B, S, d] → (dp axes, None, None) so SPMD
+    propagation through remat+scan never falls back to replication
+    (§Perf iteration 4: minicpm attention ran at full global batch per
+    device without this)."""
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not dp or not shard_batch:
+        return x
+    total = 1
+    for a in dp:
+        total *= mesh.shape[a]
+    if x.shape[0] % total:
+        return x
+    spec = P(dp, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _temporal(bp, cfg, kind, x, *, state, cur_pos, causal, mesh):
+    if kind in ("g", "l", "b"):
+        out, new_cache = attention_layer(
+            bp["attn"], cfg, x, is_local=(kind == "l"),
+            cache=None if state is None else state,
+            cur_pos=cur_pos, causal=(kind != "b") and causal, mesh=mesh)
+        return out, new_cache
+    if kind == "r":
+        return rglru_layer(bp["rnn"], cfg, x, state=state)
+    if kind == "w":
+        return rwkv_time_mix(bp["tmix"], cfg, x, state=state)
+    raise ValueError(kind)
+
+
+def block_apply(bp, cfg: ModelConfig, kind: str, x, *, state=None,
+                cur_pos=None, enc_out=None, mesh=None):
+    """Pre-norm (optionally sandwich) block. Returns (x, new_state, aux)."""
+    aux = jnp.float32(0.0)
+    x = constrain_act(x, mesh)
+    h = rms_norm(x, bp["norm1"], cfg.norm_eps)
+    tstate = None if state is None else state.get("t")
+    out, new_t = _temporal(bp, cfg, kind, h, state=tstate, cur_pos=cur_pos,
+                           causal=True, mesh=mesh)
+    if cfg.sandwich_norm:
+        out = rms_norm(out, bp["post1"], cfg.norm_eps)
+    x = x + out
+
+    if enc_out is not None and "xattn" in bp:
+        h = rms_norm(x, bp["norm_x"], cfg.norm_eps)
+        kv = _cross_kv(bp["xattn"], enc_out)
+        out, _ = attention_layer(bp["xattn"], cfg, h, is_local=False,
+                                 kv_override=kv, causal=False)
+        x = x + out
+
+    h = rms_norm(x, bp["norm2"], cfg.norm_eps)
+    mstate = None if state is None else state.get("m")
+    new_m = None
+    if kind == "w":
+        out, new_m = rwkv_channel_mix(bp["cmix"], cfg, h, state=mstate)
+    elif cfg.is_moe:
+        out, aux = moe_layer(bp["moe"], cfg, h, mesh=mesh)
+    else:
+        out = mlp_layer(bp["mlp"], cfg, h, mesh=mesh)
+    if cfg.sandwich_norm:
+        out = rms_norm(out, bp["post2"], cfg.norm_eps)
+    x = x + out
+    new_state = None
+    if state is not None:
+        new_state = {"t": new_t, "m": new_m} if new_m is not None else \
+            {"t": new_t}
+    return x, new_state, aux
+
+
+def _cross_kv(p, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype),
+                   preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype),
+                   preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# stacks
+# --------------------------------------------------------------------------
+def _sinusoid(S, d):
+    pos = np.arange(S)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10_000.0, 2 * i / d)
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), COMPUTE_DTYPE)
+
+
+def _sinusoid_at(positions, d):
+    """Sinusoidal embeddings at traced positions [S] → [S, d]."""
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = positions.astype(jnp.float32)[:, None] / jnp.power(
+        10_000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)],
+                           axis=-1).astype(COMPUTE_DTYPE)
+
+
+def encode(params, cfg: ModelConfig, enc_embeds, *, mesh=None):
+    """Whisper-style encoder over precomputed frame embeddings [B, T, d]."""
+    x = enc_embeds.astype(COMPUTE_DTYPE) + _sinusoid(
+        enc_embeds.shape[1], cfg.d_model)[None]
+
+    def body(x, bp):
+        x, _, _ = block_apply(bp, cfg, "b", x, mesh=mesh)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"]["l0"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens=None, embeds=None, *,
+                   states=None, cur_pos=None, enc_out=None, mesh=None):
+    """Decoder trunk → hidden [B, S, d]. Returns (hidden, new_states, aux)."""
+    if embeds is None:
+        x = embed(tokens, params["embed"])
+    else:
+        x = embeds.astype(COMPUTE_DTYPE)
+    if cfg.is_encdec:
+        S = x.shape[1]
+        start = jnp.int32(0) if cur_pos is None else jnp.asarray(cur_pos)
+        positions = start + jnp.arange(S)
+        x = x + _sinusoid_at(positions, cfg.d_model)[None]
+
+    P = len(cfg.pattern)
+    n_full, rem = cfg.n_layers // P, cfg.n_layers % P
+    aux_total = jnp.float32(0.0)
+
+    def period(x, bparams, bstates):
+        new_states = {}
+        aux = jnp.float32(0.0)
+        for j, kind in enumerate(cfg.pattern):
+            st = None if bstates is None else bstates[f"l{j}"]
+            x, ns, a = block_apply(
+                bparams[f"l{j}"], cfg, kind, x, state=st, cur_pos=cur_pos,
+                enc_out=enc_out, mesh=mesh)
+            aux = aux + a
+            if ns is not None:
+                new_states[f"l{j}"] = ns
+        return x, (new_states if new_states else None), aux
+
+    if states is None:
+        def period_fwd(x, bparams):
+            x, _, a = period(x, bparams, None)
+            return x, a
+
+        if cfg.remat == "full":
+            # per-layer-period remat: backward recomputes the block, so the
+            # scan saves only [B, S, d] per period instead of every
+            # intermediate (§Perf iteration 6).
+            period_fwd = jax.checkpoint(period_fwd, prevent_cse=False)
+
+        def body(carry, bparams):
+            x, aux = carry
+            x, a = period_fwd(x, bparams)
+            return (x, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(
+            body, (x, aux_total), params["blocks"])
+        new_blk_states = None
+    else:
+        def body(carry, xs):
+            x, aux = carry
+            bparams, bstates = xs
+            x, ns, a = period(x, bparams, bstates)
+            return (x, aux + a), ns
+        (x, aux_total), new_blk_states = jax.lax.scan(
+            body, (x, aux_total), (params["blocks"], states["blocks"]))
+
+    new_tail_states = {}
+    for j in range(rem):
+        st = None if states is None else states["tail"][f"l{j}"]
+        x, ns, a = block_apply(
+            params["tail"][f"l{j}"], cfg, cfg.pattern[j], x, state=st,
+            cur_pos=cur_pos, enc_out=enc_out, mesh=mesh)
+        aux_total = aux_total + a
+        if ns is not None:
+            new_tail_states[f"l{j}"] = ns
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    new_states = None
+    if states is not None:
+        new_states = {"blocks": new_blk_states, "tail": new_tail_states}
+    return x, new_states, aux_total
+
+
+# --------------------------------------------------------------------------
+# losses / serving entry points
+# --------------------------------------------------------------------------
+def lm_loss(params, cfg: ModelConfig, batch: dict, *, mesh=None):
+    """batch: {"tokens": [B, S+1] int32} (+ "enc_embeds" for enc-dec,
+    "embeds" for stub frontends). Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode(params, cfg, batch["enc_embeds"], mesh=mesh)
+    embeds = batch.get("embeds")
+    hidden, _, aux = forward_hidden(
+        params, cfg, tokens=None if embeds is not None else inputs,
+        embeds=embeds, enc_out=enc_out, mesh=mesh)
+    loss, wt = chunked_softmax_xent(
+        hidden, params["embed"], targets, cap=cfg.logit_softcap)
+    total = loss + 0.01 * aux
+    return total, {"xent": loss, "aux": aux, "tokens": wt}
+
+
+def init_decode_states(cfg: ModelConfig, B: int, cache_len: int):
+    """Per-layer decode state pytree matching the scan structure."""
+    P = len(cfg.pattern)
+    n_full, rem = cfg.n_layers // P, cfg.n_layers % P
+
+    def one(kind):
+        if kind in ("g", "b"):
+            C = cache_len
+        elif kind == "l":
+            C = min(cfg.window, cache_len)
+        if kind in ("g", "l", "b"):
+            return {"t": {
+                "k": jnp.zeros((B, C, cfg.n_kv_heads, cfg.hd), COMPUTE_DTYPE),
+                "v": jnp.zeros((B, C, cfg.n_kv_heads, cfg.hd), COMPUTE_DTYPE),
+            }}
+        if kind == "r":
+            return {"t": init_rglru_state(cfg, B)}
+        if kind == "w":
+            s = init_rwkv_state(cfg, B)
+            return {"t": s["tm"], "m": s["cm"]}
+        raise ValueError(kind)
+
+    def stack(tree):
+        return jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (n_full,) + l.shape), tree)
+
+    blocks = {f"l{j}": stack(one(k)) for j, k in enumerate(cfg.pattern)}
+    tail = {f"l{j}": one(cfg.pattern[j]) for j in range(rem)}
+    return {"blocks": blocks, "tail": tail}
+
+
+def decode_step(params, cfg: ModelConfig, token, states, cur_pos, *,
+                enc_out=None, mesh=None):
+    """token [B, 1] int32; cur_pos int32[] — absolute position.
+    Returns (logits [B, 1, V], new_states)."""
+    hidden, new_states, _ = forward_hidden(
+        params, cfg, tokens=token, states=states, cur_pos=cur_pos,
+        enc_out=enc_out, mesh=mesh)
+    logits = logits_from_embedding(hidden, params["embed"],
+                                   cap=cfg.logit_softcap)
+    return logits, new_states

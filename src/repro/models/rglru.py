@@ -1,0 +1,93 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t),
+a_t = exp(−c · softplus(Λ) · r_t),  r_t, i_t input-dependent sigmoid gates.
+
+The linear recurrence is evaluated with jax.lax.associative_scan (parallel
+prefix — the TPU-friendly O(log T) depth form); decode carries (h, conv)
+state for O(1) per-token cost (long_500k applicability, DESIGN §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import COMPUTE_DTYPE
+
+_C = 8.0
+
+
+def init_rglru(col, prefix: str, cfg):
+    D = cfg.lru_dim or cfg.d_model
+    d = cfg.d_model
+    col.param(f"{prefix}.w_x", (d, D), ("embed_fsdp", "mlp"))
+    col.param(f"{prefix}.w_gate", (d, D), ("embed_fsdp", "mlp"))
+    col.param(f"{prefix}.conv", (cfg.conv_width, D), ("conv", "mlp"))
+    col.param(f"{prefix}.w_rg", (D, D), ("mlp", None))
+    col.param(f"{prefix}.w_ig", (D, D), ("mlp", None))
+    col.param(f"{prefix}.lam", (D,), ("mlp",), init="ones")
+    col.param(f"{prefix}.w_out", (D, d), ("mlp", "embed_fsdp"),
+              scale=0.02 / np.sqrt(2 * cfg.n_layers))
+
+
+def _causal_conv(x, kernel, state=None):
+    """x [B, S, D]; kernel [W, D] depthwise causal. state [B, W-1, D]."""
+    W = kernel.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * kernel[i].astype(x.dtype)
+              for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else None
+    return out, new_state
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", u, p["w_rg"].astype(u.dtype),
+                                  preferred_element_type=jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...d,de->...e", u, p["w_ig"].astype(u.dtype),
+                                  preferred_element_type=jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12))
+    return a, mult * i
+
+
+def rglru_layer(p, cfg, x, *, state=None):
+    """x [B, S, d] → ([B, S, d], new_state). state = {h, conv} for decode."""
+    u = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(COMPUTE_DTYPE)
+    gate = jnp.einsum("bsd,de->bse", x, p["w_gate"].astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+    u, conv_state = _causal_conv(
+        u, p["conv"], None if state is None else state["conv"])
+
+    a, b_scale = _gates(p, u)
+    b = (b_scale * u.astype(jnp.float32))
+
+    if state is None:
+        # parallel prefix over S:  h_t = a_t h_{t-1} + b_t
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        new_state = None if conv_state is None else {
+            "h": h[:, -1], "conv": conv_state}
+    else:
+        h = (a * state["h"][:, None].astype(jnp.float32) + b)
+        new_state = {"h": h[:, -1], "conv": conv_state}
+
+    out = h.astype(COMPUTE_DTYPE) * jax.nn.gelu(gate).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bse,ed->bsd", out, p["w_out"].astype(out.dtype),
+                     preferred_element_type=jnp.float32)
+    return out.astype(COMPUTE_DTYPE), new_state
+
+
+def init_rglru_state(cfg, B: int):
+    D = cfg.lru_dim or cfg.d_model
+    return {"h": jnp.zeros((B, D), jnp.float32),
+            "conv": jnp.zeros((B, cfg.conv_width - 1, D), COMPUTE_DTYPE)}

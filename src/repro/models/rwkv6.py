@@ -1,0 +1,123 @@
+"""RWKV6 "Finch" time-mix + channel-mix (arXiv:2404.05892), attention-free.
+
+Time-mix recurrence per head (hd = head dim, state S ∈ R^{hd×hd}):
+    y_t = r_t · (S_{t-1} + (u ⊙ k_t) v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ           (data-dependent decay w_t)
+Training uses lax.scan over time (the recurrence is inherently sequential;
+a chunked parallel form is a recorded §Perf candidate); decode is O(1)/token
+carrying (x_prev, S) — which is why rwkv6 runs the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import COMPUTE_DTYPE, rms_norm
+
+
+def init_rwkv_time_mix(col, prefix: str, cfg):
+    d = cfg.d_model
+    H, hd = cfg.n_heads, cfg.hd
+    for nm in ("r", "k", "v", "g", "w"):
+        col.param(f"{prefix}.mu_{nm}", (d,), ("embed",), init="zeros")
+    col.param(f"{prefix}.w_r", (d, H * hd), ("embed_fsdp", "heads"))
+    col.param(f"{prefix}.w_k", (d, H * hd), ("embed_fsdp", "heads"))
+    col.param(f"{prefix}.w_v", (d, H * hd), ("embed_fsdp", "heads"))
+    col.param(f"{prefix}.w_g", (d, H * hd), ("embed_fsdp", "heads"))
+    col.param(f"{prefix}.w_w", (d, H * hd), ("embed_fsdp", "heads"),
+              scale=0.001)
+    col.param(f"{prefix}.w0", (H * hd,), ("heads",), init="zeros")
+    col.param(f"{prefix}.u", (H, hd), ("heads", "head_dim"), scale=0.1)
+    col.param(f"{prefix}.ln_x", (H * hd,), ("heads",), init="zeros")
+    col.param(f"{prefix}.w_out", (H * hd, d), ("heads", "embed_fsdp"),
+              scale=0.02 / np.sqrt(2 * cfg.n_layers))
+
+
+def _token_shift(x, mu, x_prev):
+    """lerp(x_{t-1}, x_t, μ). x [B,S,d]; x_prev [B,1,d] (decode carry)."""
+    shifted = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    mu = mu.astype(x.dtype)
+    return x * (1 + mu) - shifted * mu  # x + μ(x − x_{t−1}) form
+
+
+def rwkv_time_mix(p, cfg, x, *, state=None):
+    """x [B, S, d] → (out, new_state). state = {"x_prev": [B,1,d],
+    "S": [B,H,hd,hd]} for decode / chunk continuation."""
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    x_prev = (jnp.zeros((B, 1, d), x.dtype) if state is None
+              else state["x_prev"].astype(x.dtype))
+
+    def proj(nm):
+        xs = _token_shift(x, p[f"mu_{nm}"], x_prev)
+        return jnp.einsum("bsd,de->bse", xs, p[f"w_{nm}"].astype(x.dtype),
+                          preferred_element_type=jnp.float32)
+
+    r = proj("r").reshape(B, S, H, hd)
+    k = proj("k").reshape(B, S, H, hd)
+    v = proj("v").reshape(B, S, H, hd)
+    g = proj("g")
+    w = jnp.exp(-jnp.exp(
+        (p["w0"].astype(jnp.float32) + proj("w")).clip(-20, 10)
+    )).reshape(B, S, H, hd)                               # decay ∈ (0,1)
+    u = p["u"].astype(jnp.float32)
+
+    S0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if state is None
+          else state["S"])
+
+    def step(Sm, inp):
+        r_t, k_t, v_t, w_t = inp                          # [B,H,hd]
+        kv = k_t[..., :, None] * v_t[..., None, :]        # [B,H,hd,hd]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       Sm + u[None, :, :, None] * kv)
+        S_new = w_t[..., :, None] * Sm + kv
+        return S_new, y
+
+    xs = tuple(a.swapaxes(0, 1).astype(jnp.float32) for a in (r, k, v, w))
+    S_fin, ys = jax.lax.scan(step, S0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, S, H * hd)           # [B,S,H*hd]
+
+    y = rms_norm(y.astype(COMPUTE_DTYPE), p["ln_x"], cfg.norm_eps)
+    y = y * jax.nn.silu(g).astype(COMPUTE_DTYPE)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(y.dtype),
+                     preferred_element_type=jnp.float32)
+    new_state = {"x_prev": x[:, -1:].astype(COMPUTE_DTYPE), "S": S_fin}
+    return out.astype(COMPUTE_DTYPE), new_state
+
+
+def init_rwkv_channel_mix(col, prefix: str, cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    col.param(f"{prefix}.mu_k", (d,), ("embed",), init="zeros")
+    col.param(f"{prefix}.mu_r", (d,), ("embed",), init="zeros")
+    col.param(f"{prefix}.w_k", (d, ff), ("embed_fsdp", "mlp"))
+    col.param(f"{prefix}.w_r", (d, d), ("embed_fsdp", None))
+    col.param(f"{prefix}.w_v", (ff, d), ("mlp", "embed_fsdp"),
+              scale=0.02 / np.sqrt(2 * cfg.n_layers))
+
+
+def rwkv_channel_mix(p, cfg, x, *, state=None):
+    B, S, d = x.shape
+    x_prev = (jnp.zeros((B, 1, d), x.dtype) if state is None
+              else state["x_prev"].astype(x.dtype))
+    xk = _token_shift(x, p["mu_k"], x_prev)
+    xr = _token_shift(x, p["mu_r"], x_prev)
+    k = jnp.einsum("bsd,df->bsf", xk, p["w_k"].astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    k = jnp.square(jax.nn.relu(k)).astype(COMPUTE_DTYPE)
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_v"].astype(k.dtype),
+                    preferred_element_type=jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr,
+                                  p["w_r"].astype(x.dtype),
+                                  preferred_element_type=jnp.float32))
+    out = (r * kv).astype(COMPUTE_DTYPE)
+    return out, {"x_prev": x[:, -1:].astype(COMPUTE_DTYPE)}
+
+
+def init_rwkv_state(cfg, B: int):
+    H, hd, d = cfg.n_heads, cfg.hd, cfg.d_model
+    return {
+        "tm": {"x_prev": jnp.zeros((B, 1, d), COMPUTE_DTYPE),
+               "S": jnp.zeros((B, H, hd, hd), jnp.float32)},
+        "cm": {"x_prev": jnp.zeros((B, 1, d), COMPUTE_DTYPE)},
+    }

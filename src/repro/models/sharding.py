@@ -1,0 +1,154 @@
+"""Logical-axis sharding: params carry logical axis names, a rule table maps
+them to mesh axes (MaxText-style). Rules are per-arch configurable — they are
+the main §Perf hillclimb lever.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default logical → mesh axis rules. `None` = replicate.
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),      # data parallel (pods are extra DP)
+    "seq": None,                   # sequence usually unsharded
+    "seq_sp": "model",             # sequence-parallel regions (MoE dispatch)
+    "vocab": "model",
+    "embed": None,                 # d_model
+    "embed_fsdp": ("data", "pod"),  # FSDP over ALL pure-DP axes (ZeRO)
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",                # d_ff
+    "experts": "model",            # EP
+    "expert_mlp": None,
+    "layers": None,                # scan dim
+    "conv": None,
+    "state": None,
+}
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    rules: dict = field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def spec(self, logical_axes: tuple) -> P:
+        parts = []
+        used = set()
+        for ax in logical_axes:
+            m = self.rules.get(ax) if ax is not None else None
+            # never map two tensor dims to the same mesh axis
+            flat = tuple(m) if isinstance(m, tuple) else ((m,) if m else ())
+            if any(f in used for f in flat):
+                m = None
+            for f in flat:
+                used.add(f)
+            parts.append(m)
+        return P(*parts)
+
+    def with_overrides(self, **kv) -> "ShardingRules":
+        r = dict(self.rules)
+        r.update(kv)
+        return ShardingRules(rules=r)
+
+
+def logical_to_sharding(tree_axes, mesh: Mesh, rules: ShardingRules,
+                        tree_abs=None):
+    """Map a pytree of logical-axis tuples to NamedShardings.
+
+    With `tree_abs` (matching pytree of ShapeDtypeStructs/arrays), mesh axes
+    that do not evenly divide the tensor dim are dropped (e.g. whisper's 12
+    heads on a 16-way model axis fall back to replication)."""
+
+    def one(axes, leaf=None):
+        spec = rules.spec(axes)
+
+        def filt(e, dim_size=None):
+            if e is None:
+                return None
+            axs = e if isinstance(e, tuple) else (e,)
+            kept = tuple(a for a in axs if a in mesh.axis_names)
+            if dim_size is not None:
+                total = 1
+                ok = []
+                for a in kept:
+                    if dim_size % (total * mesh.shape[a]) == 0:
+                        ok.append(a)
+                        total *= mesh.shape[a]
+                kept = tuple(ok)
+            if not kept:
+                return None
+            return kept if len(kept) > 1 else kept[0]
+
+        dims = (list(leaf.shape) if leaf is not None
+                else [None] * len(spec))
+        spec = P(*[filt(e, d) for e, d in zip(spec, dims)])
+        return NamedSharding(mesh, spec)
+
+    if tree_abs is None:
+        return jax.tree_util.tree_map(
+            one, tree_axes, is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree_util.tree_map(
+        one, tree_axes, tree_abs, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def constrain(x, mesh: Mesh, rules: ShardingRules, logical_axes: tuple):
+    """with_sharding_constraint by logical axes (no-op outside jit/mesh)."""
+    try:
+        sh = logical_to_sharding(logical_axes, mesh, rules)
+        return jax.lax.with_sharding_constraint(x, sh)
+    except Exception:
+        return x
+
+
+class ParamCollector:
+    """Collects (shape, logical_axes, init) during model init."""
+
+    def __init__(self, key):
+        self.key = key
+        self.params: dict = {}
+        self.axes: dict = {}
+
+    def _split(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def param(self, path: str, shape, axes, *, scale: float = 0.02,
+              dtype=jnp.float32, init: str = "normal"):
+        assert len(shape) == len(axes), (path, shape, axes)
+        d = self.params
+        a = self.axes
+        keys = path.split(".")
+        for k in keys[:-1]:
+            d = d.setdefault(k, {})
+            a = a.setdefault(k, {})
+        if init == "normal":
+            val = jax.random.normal(self._split(), shape, dtype) * scale
+        elif init == "zeros":
+            val = jnp.zeros(shape, dtype)
+        elif init == "ones":
+            val = jnp.ones(shape, dtype)
+        else:
+            raise ValueError(init)
+        d[keys[-1]] = val
+        a[keys[-1]] = tuple(axes)
+        return val
+
+    def abstract_param(self, path: str, shape, axes, dtype=jnp.float32):
+        """ShapeDtypeStruct variant for allocation-free dry-runs."""
+        d = self.params
+        a = self.axes
+        keys = path.split(".")
+        for k in keys[:-1]:
+            d = d.setdefault(k, {})
+            a = a.setdefault(k, {})
+        d[keys[-1]] = jax.ShapeDtypeStruct(tuple(shape), dtype)
+        a[keys[-1]] = tuple(axes)
+
+
+def param_count(params) -> int:
+    return int(sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(params)))

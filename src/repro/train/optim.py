@@ -1,0 +1,181 @@
+"""Optimizers built from scratch: AdamW, Adafactor (factored second moment —
+the 1T-param memory play), SGD+momentum; global-norm clipping; int8
+error-feedback gradient compression for the DP all-reduce.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # adamw | adafactor | sgdm
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    momentum: float = 0.9
+    compress: bool = False       # int8 error-feedback DP compression
+
+
+# --------------------------------------------------------------------------
+# gradient clipping
+# --------------------------------------------------------------------------
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+# --------------------------------------------------------------------------
+# int8 error-feedback compression (gradient compression, DESIGN §6)
+# --------------------------------------------------------------------------
+def compress_int8(g: jnp.ndarray):
+    """Symmetric per-tensor int8 quantisation. Returns (q, scale)."""
+    a = jnp.max(jnp.abs(g.astype(jnp.float32)))
+    scale = jnp.maximum(a, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_grads_with_feedback(grads, errors):
+    """Quantise grads + carry the quantisation error into the next step
+    (error feedback keeps convergence; unit-tested)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = compress_int8(g32)
+        deq = decompress_int8(q, s)
+        return deq.astype(g.dtype), (g32 - deq)
+    flat = jax.tree_util.tree_map(one, grads, errors)
+    new_g = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_e
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+def adamw_update(params, grads, state, cfg: OptConfig, lr):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_ = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_ = cfg.b2 * v + (1 - cfg.b2) * g32 * g32
+        mh, vh = m_ / c1, v_ / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_, v_
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), {"m": pick(1), "v": pick(2), "step": step}
+
+
+# --------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern) — factored second moment, no first moment
+# --------------------------------------------------------------------------
+def adafactor_init(params):
+    def one(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"f": jax.tree_util.tree_map(
+        one, params, is_leaf=lambda x: not isinstance(x, dict)),
+        "step": jnp.zeros((), jnp.int32)}
+
+def adafactor_update(params, grads, state, cfg: OptConfig, lr):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** -0.8
+    eps = 1e-30
+
+    def upd(p, g, s):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if p.ndim >= 2:
+            vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            vhat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+            upd_ = g32 / jnp.sqrt(vhat + eps)
+            new_s = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * s["v"] + (1 - beta2) * g2
+            upd_ = g32 / jnp.sqrt(v + eps)
+            new_s = {"v": v}
+        # update clipping (RMS ≤ 1) as in the paper
+        rms = jnp.sqrt(jnp.mean(jnp.square(upd_)) + eps)
+        upd_ = upd_ / jnp.maximum(1.0, rms)
+        new_p = (p.astype(jnp.float32) * (1 - lr * cfg.weight_decay)
+                 - lr * upd_).astype(p.dtype)
+        return new_p, new_s
+
+    # tree_map walks `params`' structure; the matching state["f"] subtree at
+    # each param leaf is the {"vr","vc"}/{"v"} dict, passed whole to `upd`.
+    out = jax.tree_util.tree_map(upd, params, grads, state["f"])
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), {"f": pick(1), "step": step}
+
+
+# --------------------------------------------------------------------------
+# SGD + momentum
+# --------------------------------------------------------------------------
+def sgdm_init(params):
+    return {"m": jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32)}
+
+def sgdm_update(params, grads, state, cfg: OptConfig, lr):
+    def upd(p, g, m):
+        m_ = cfg.momentum * m + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * m_).astype(p.dtype), m_
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"])
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda t: t[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), {"m": pick(1), "step": state["step"] + 1}
+
+
+OPTIMIZERS = {
+    "adamw": (adamw_init, adamw_update),
+    "adafactor": (adafactor_init, adafactor_update),
+    "sgdm": (sgdm_init, sgdm_update),
+}
+
+
+def make_optimizer(cfg: OptConfig):
+    init, update = OPTIMIZERS[cfg.name]
+    return init, functools.partial(update, cfg=cfg)

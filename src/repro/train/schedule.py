@@ -1,0 +1,31 @@
+"""LR schedules: cosine and WSD (warmup–stable–decay, MiniCPM arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = t / jnp.maximum(warmup, 1)
+    prog = jnp.clip((t - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * jnp.where(t < warmup, warm, cos)
+
+
+def wsd_schedule(step, *, base_lr: float, warmup: int, total: int,
+                 decay_frac: float = 0.1, min_ratio: float = 0.01):
+    """Warmup → stable plateau → fast exponential-ish (linear here) decay in
+    the final `decay_frac` of training."""
+    t = step.astype(jnp.float32)
+    decay_start = total * (1.0 - decay_frac)
+    warm = t / jnp.maximum(warmup, 1)
+    dec = 1.0 - (1.0 - min_ratio) * jnp.clip(
+        (t - decay_start) / jnp.maximum(total - decay_start, 1), 0.0, 1.0)
+    return base_lr * jnp.where(
+        t < warmup, warm, jnp.where(t < decay_start, 1.0, dec))
+
+
+def make_schedule(name: str, **kw):
+    fn = {"cosine": cosine_schedule, "wsd": wsd_schedule}[name]
+    return lambda step: fn(step, **kw)

@@ -1,0 +1,55 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitonic import (bitonic_sort, lex_lt_int, next_pow2,
+                                sort_rows_with_index)
+
+
+@given(st.lists(st.integers(min_value=-5, max_value=5), min_size=1,
+                max_size=64))
+@settings(max_examples=40, deadline=None)
+def test_bitonic_sorts_any_comparator_input(xs):
+    n = next_pow2(len(xs))
+    vals = np.asarray(xs + [10**6] * (n - len(xs)), np.int32)
+    idx = np.arange(n, dtype=np.int32)
+    payload = {"v": jnp.asarray(vals), "i": jnp.asarray(idx)}
+
+    def lt(a, b):
+        return jnp.where(a["v"] != b["v"], a["v"] < b["v"], a["i"] < b["i"])
+
+    out = bitonic_sort(payload, lt)
+    got = np.asarray(out["v"])[:len(xs)]
+    assert np.array_equal(got, np.sort(np.asarray(xs)))
+    # stability via index tiebreak
+    got_i = np.asarray(out["i"])[:len(xs)]
+    want_i = np.lexsort((np.arange(len(xs)), np.asarray(xs)))
+    assert np.array_equal(got_i, want_i)
+
+
+def test_bitonic_reverse_comparator():
+    vals = np.arange(32, dtype=np.int32)
+    payload = {"v": jnp.asarray(vals), "i": jnp.arange(32, dtype=jnp.int32)}
+    out = bitonic_sort(payload, lambda a, b: jnp.where(
+        a["v"] != b["v"], a["v"] > b["v"], a["i"] < b["i"]))
+    assert np.array_equal(np.asarray(out["v"]), vals[::-1])
+
+
+@given(st.integers(min_value=1, max_value=6), st.integers(0, 1000))
+@settings(max_examples=30, deadline=None)
+def test_lex_lt_int(w, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-3, 3, (40, w)).astype(np.int32)
+    b = rng.integers(-3, 3, (40, w)).astype(np.int32)
+    lt, eq = lex_lt_int(jnp.asarray(a), jnp.asarray(b))
+    for i in range(40):
+        assert bool(lt[i]) == (tuple(a[i]) < tuple(b[i]))
+        assert bool(eq[i]) == (tuple(a[i]) == tuple(b[i]))
+
+
+def test_sort_rows_with_index_stable():
+    rng = np.random.default_rng(0)
+    rows = rng.integers(0, 3, (100, 2)).astype(np.int32)
+    perm = np.asarray(sort_rows_with_index(jnp.asarray(rows), 2))
+    want = np.lexsort((np.arange(100), rows[:, 1], rows[:, 0]))
+    assert np.array_equal(perm, want)

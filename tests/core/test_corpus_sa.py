@@ -1,0 +1,40 @@
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.text.corpus_sa import (build_corpus_sa, count_occurrences,
+                                  cross_doc_duplicates)
+
+
+@given(st.lists(st.lists(st.integers(0, 3), min_size=1, max_size=40),
+                min_size=1, max_size=5),
+       st.lists(st.integers(0, 3), min_size=1, max_size=3))
+@settings(max_examples=30, deadline=None)
+def test_count_occurrences_matches_naive(docs, pattern):
+    csa = build_corpus_sa([np.asarray(d) for d in docs])
+    got = count_occurrences(csa, pattern)
+    want = 0
+    m = len(pattern)
+    for d in docs:
+        for i in range(len(d) - m + 1):
+            if list(d[i:i + m]) == list(pattern):
+                want += 1
+    assert got == want
+
+
+def test_cross_doc_duplicates_detects_contamination():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 50, 300)
+    b = rng.integers(0, 50, 300)
+    b[100:180] = a[50:130]                     # contaminate doc 1 with doc 0
+    csa = build_corpus_sa([a, b])
+    hits = cross_doc_duplicates(csa, min_len=60)
+    assert any(l >= 80 for _, _, l in hits)
+    assert all(i == 0 and j == 1 for i, j, _ in hits)
+
+
+def test_no_cross_document_suffix_confusion():
+    # "ab" + "ab": suffixes must not extend across the boundary — pattern
+    # "ba" does not occur (the separator splits it)
+    csa = build_corpus_sa([[0, 1], [0, 1]])
+    assert count_occurrences(csa, [0, 1]) == 2
+    assert count_occurrences(csa, [1, 0]) == 0

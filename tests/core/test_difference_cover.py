@@ -1,0 +1,61 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.difference_cover import (cover_size_lower_bound, cover_tables,
+                                         difference_cover,
+                                         is_difference_cover)
+
+
+@given(st.integers(min_value=3, max_value=600))
+@settings(max_examples=120, deadline=None)
+def test_cover_is_valid_and_zero_free(v):
+    D = difference_cover(v)
+    assert is_difference_cover(D, v)
+    assert 0 not in D
+    assert len(D) < v
+    assert len(set(D)) == len(D)
+
+
+@given(st.integers(min_value=3, max_value=400))
+@settings(max_examples=60, deadline=None)
+def test_cover_size_near_optimal(v):
+    """|D| = O(√v): stay within a small factor of the lower bound."""
+    D = difference_cover(v)
+    lb = cover_size_lower_bound(v)
+    assert len(D) <= max(4, 3.0 * lb)
+
+
+@given(st.integers(min_value=3, max_value=200))
+@settings(max_examples=50, deadline=None)
+def test_lemma1_tables(v):
+    """Λ[k1,k2] satisfies Lemma 1; shifts rows enumerate {l : (k+l) ∈ D}."""
+    t = cover_tables(v)
+    D = set(t.D)
+    for k in range(v):
+        for l in t.shifts[k]:
+            assert (k + int(l)) % v in D
+    rng = np.random.default_rng(v)
+    ks = rng.integers(0, v, size=(20, 2))
+    for k1, k2 in ks:
+        l = int(t.lam[k1, k2])
+        assert 0 <= l < v
+        assert (k1 + l) % v in D and (k2 + l) % v in D
+        # lam_idx point back into the shifts rows
+        assert int(t.shifts[k1][t.lam_idx1[k1, k2]]) == l
+        assert int(t.shifts[k2][t.lam_idx2[k1, k2]]) == l
+
+
+def test_paper_table2_sizes():
+    """C2: our constructor vs the paper's Colbourn–Ling sizes (Table 2).
+    Ours may differ by a constant factor but must stay O(√v)."""
+    paper = {5: 4, 13: 4, 14: 10, 73: 10, 74: 16, 181: 16, 182: 22,
+             337: 22, 338: 28, 541: 28, 1024: 40, 2048: 58}
+    for v, cl_size in paper.items():
+        ours = len(difference_cover(v))
+        assert ours <= 2.5 * cl_size + 4, (v, ours, cl_size)
+
+
+def test_rejects_v_below_3():
+    with pytest.raises(ValueError):
+        difference_cover(2)

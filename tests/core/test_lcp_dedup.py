@@ -1,0 +1,56 @@
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.oracle import suffix_array_naive
+from repro.text.dedup import dedup_corpus, find_duplicates
+from repro.text.lcp import lcp_kasai, ngram_counts, repeated_substring_spans
+
+
+def _lcp_naive(x, sa):
+    out = np.zeros(len(x), dtype=np.int64)
+    for r in range(1, len(sa)):
+        a, b = x[sa[r - 1]:], x[sa[r]:]
+        h = 0
+        while h < len(a) and h < len(b) and a[h] == b[h]:
+            h += 1
+        out[r] = h
+    return out
+
+
+@given(st.lists(st.integers(min_value=0, max_value=3), min_size=1,
+                max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_kasai_matches_naive(xs):
+    x = np.asarray(xs)
+    sa = suffix_array_naive(x)
+    assert np.array_equal(lcp_kasai(x, sa), _lcp_naive(x, sa))
+
+
+def test_repeated_spans_detects_planted_duplicate():
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 50, 600)
+    x[300:360] = x[100:160]                    # plant a 60-char duplicate
+    rep = find_duplicates(x, min_len=40)
+    assert rep.dup_chars >= 60
+    covered = set()
+    for s, e in rep.spans:
+        covered.update(range(s, e))
+    assert set(range(300, 360)) <= covered or set(range(100, 160)) <= covered
+
+
+def test_dedup_removes_duplicates_idempotent():
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, 64, 800)
+    x[500:620] = x[100:220]
+    out, rep = dedup_corpus(x, min_len=64)
+    assert len(out) < len(x)
+    out2, rep2 = dedup_corpus(out, min_len=64)
+    assert rep2.dup_chars == 0 or len(out2) == len(out)
+
+
+def test_ngram_counts():
+    x = np.array([0, 1, 0, 1, 0])
+    sa = suffix_array_naive(x)
+    lcp = lcp_kasai(x, sa)
+    # distinct 2-grams: (0,1), (1,0) → 2
+    assert ngram_counts(x, sa, lcp, 2) == 2

@@ -1,0 +1,168 @@
+"""Component-level model tests: flash == naive attention, GQA degeneracy,
+window masks, softcap, MoE invariants, RG-LRU/RWKV scan-vs-step equivalence."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import decode_attention, flash_attention
+from repro.models.config import ModelConfig
+from repro.models.ffn import _moe_local, init_moe, moe_layer
+from repro.models.layers import softcap
+from repro.models.rglru import init_rglru, init_rglru_state, rglru_layer
+from repro.models.rwkv6 import (init_rwkv_state, init_rwkv_time_mix,
+                                rwkv_time_mix)
+from repro.models.sharding import ParamCollector
+
+
+def _naive_attn(q, k, v, causal, window, cap=None):
+    B, S, H, hd = q.shape
+    T, Hk = k.shape[1], k.shape[2]
+    G = H // Hk
+    s = jnp.einsum("bqkgd,bckd->bqkgc", q.reshape(B, S, Hk, G, hd), k) \
+        / math.sqrt(hd)
+    if cap:
+        s = softcap(s, cap)
+    qp, kp = jnp.arange(S)[:, None], jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok &= qp >= kp
+    if window:
+        ok &= (qp - kp) < window
+    s = jnp.where(ok[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bqkgc,bckd->bqkgd", p, v).reshape(B, S, H, hd)
+
+
+@pytest.mark.parametrize("S,H,Hk,causal,window,cap", [
+    (64, 4, 2, True, None, None),
+    (64, 4, 4, True, 9, None),
+    (100, 4, 1, True, 16, 50.0),
+    (48, 2, 2, False, None, None),
+])
+def test_flash_matches_naive(S, H, Hk, causal, window, cap):
+    rng = np.random.default_rng(S + H)
+    q = jnp.asarray(rng.normal(size=(2, S, H, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, S, Hk, 16)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, S, Hk, 16)), jnp.float32)
+    a = flash_attention(q, k, v, causal=causal, window=window,
+                        attn_softcap=cap, q_chunk=32, kv_chunk=32)
+    b = _naive_attn(q, k, v, causal, window, cap)
+    assert float(jnp.max(jnp.abs(a - b))) < 2e-2
+
+
+def test_gqa_equals_mha_when_kv_heads_match():
+    """GQA with Hk == H must equal MHA head-for-head."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 32, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 32, 4, 8)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 32, 4, 8)), jnp.float32)
+    full = flash_attention(q, k, v, q_chunk=16, kv_chunk=16)
+    per_head = jnp.stack([
+        flash_attention(q[:, :, h:h+1], k[:, :, h:h+1], v[:, :, h:h+1],
+                        q_chunk=16, kv_chunk=16)[:, :, 0]
+        for h in range(4)], axis=2)
+    assert float(jnp.max(jnp.abs(full - per_head))) < 1e-2
+
+
+def test_decode_ring_buffer_matches_full():
+    """Ring-buffer decode over a window-C cache == full attention restricted
+    to the window."""
+    rng = np.random.default_rng(1)
+    B, C, Hk, hd = 1, 8, 2, 8
+    T = 20                                   # decode past the ring capacity
+    ks = jnp.asarray(rng.normal(size=(B, T, Hk, hd)), jnp.float32)
+    vs = jnp.asarray(rng.normal(size=(B, T, Hk, hd)), jnp.float32)
+    q = jnp.asarray(rng.normal(size=(B, 1, 2, hd)), jnp.float32)
+    ck = jnp.zeros((B, C, Hk, hd)); cv = jnp.zeros((B, C, Hk, hd))
+    from repro.models.attention import update_cache
+    for t in range(T):
+        ck, cv = update_cache(ck, cv, ks[:, t:t+1], vs[:, t:t+1], t)
+    out = decode_attention(q, ck, cv, T - 1, window=C)
+    want = _naive_attn(q, ks[:, T-C:], vs[:, T-C:], False, None)
+    assert float(jnp.max(jnp.abs(out - want))) < 2e-2
+
+
+def test_softcap_bounds():
+    x = jnp.linspace(-1000, 1000, 101)
+    y = softcap(x, 30.0)
+    assert float(jnp.max(jnp.abs(y))) <= 30.0
+    assert float(jnp.max(jnp.abs(softcap(x, None) - x))) == 0.0
+
+
+# ------------------------------------------------------------------- MoE
+def _moe_cfg(**kw):
+    base = dict(name="m", family="moe", n_layers=2, d_model=16, n_heads=2,
+                n_kv_heads=2, d_ff=32, vocab_size=64, n_experts=4, top_k=2)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_moe_local_routing_invariants():
+    cfg = _moe_cfg()
+    col = ParamCollector(jax.random.PRNGKey(0))
+    init_moe(col, "moe", cfg)
+    p = col.params["moe"]
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(32, 16)),
+                    jnp.float32)
+    out, aux = _moe_local(x, p["router"], p["wg"], p["wu"], p["wd"],
+                          cfg=cfg, tp=1, axis=None)
+    assert out.shape == (32, 16)
+    assert np.isfinite(float(aux)) and float(aux) > 0
+    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+
+
+def test_moe_capacity_drop_is_graceful():
+    cfg = _moe_cfg(capacity_factor=0.01)      # force drops
+    col = ParamCollector(jax.random.PRNGKey(0))
+    init_moe(col, "moe", cfg)
+    p = col.params["moe"]
+    x = jnp.ones((64, 16), jnp.float32)
+    out, _ = _moe_local(x, p["router"], p["wg"], p["wu"], p["wd"],
+                        cfg=cfg, tp=1, axis=None)
+    assert bool(jnp.all(jnp.isfinite(out.astype(jnp.float32))))
+
+
+# ---------------------------------------------------------------- RG-LRU
+def test_rglru_scan_matches_stepwise():
+    cfg = ModelConfig(name="g", family="hybrid", n_layers=2, d_model=16,
+                      n_heads=2, n_kv_heads=1, d_ff=32, vocab_size=64,
+                      lru_dim=16, conv_width=4)
+    col = ParamCollector(jax.random.PRNGKey(2))
+    init_rglru(col, "rnn", cfg)
+    p = col.params["rnn"]
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 10, 16)) * 0.3,
+                    jnp.float32)
+    full, _ = rglru_layer(p, cfg, x)
+    st = init_rglru_state(cfg, 1)
+    outs = []
+    for t in range(10):
+        o, st = rglru_layer(p, cfg, x[:, t:t+1], state=st)
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    assert float(jnp.max(jnp.abs(full.astype(jnp.float32)
+                                 - step.astype(jnp.float32)))) < 3e-2
+
+
+# ---------------------------------------------------------------- RWKV6
+def test_rwkv_scan_matches_stepwise():
+    cfg = ModelConfig(name="w", family="ssm", n_layers=2, d_model=16,
+                      n_heads=2, n_kv_heads=2, head_dim=8, d_ff=32,
+                      vocab_size=64)
+    col = ParamCollector(jax.random.PRNGKey(3))
+    init_rwkv_time_mix(col, "tm", cfg)
+    p = col.params["tm"]
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(1, 8, 16)) * 0.3,
+                    jnp.float32)
+    full, _ = rwkv_time_mix(p, cfg, x)
+    st = init_rwkv_state(cfg, 1)["tm"]
+    outs = []
+    for t in range(8):
+        o, st = rwkv_time_mix(p, cfg, x[:, t:t+1], state=st)
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    assert float(jnp.max(jnp.abs(full.astype(jnp.float32)
+                                 - step.astype(jnp.float32)))) < 3e-2
