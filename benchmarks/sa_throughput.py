@@ -1,29 +1,65 @@
-"""SA construction throughput vs n: JAX DC-v vs numpy reference vs
-prefix-doubling oracle (sequential-side evidence for the paper's O(vn))."""
+"""SA construction throughput vs n across the `repro.api` backend registry
+(sequential-side evidence for the paper's O(vn)). Emits the usual CSV lines
+plus a machine-readable `BENCH_sa_throughput.json` artifact so the perf
+trajectory is recorded run over run.
+
+    PYTHONPATH=src python -m benchmarks.sa_throughput [--out PATH]
+"""
+import argparse
+import json
+import platform
+import sys
+
 import numpy as np
 
-from repro.core.dcv_jax import suffix_array_jax
-from repro.core.oracle import suffix_array_doubling
-from repro.core.seq_ref import suffix_array_dcv
+from repro.api import SAOptions, build_suffix_array, registered_backends
 
 from .bench_util import emit, time_call
 
+SIZES = (10_000, 50_000, 200_000)
+#: per-backend n ceiling: the references are executable specs, not fast paths
+MAX_N = {"oracle": 50_000, "seq": 50_000}
 
-def main():
+
+def bench_backend(backend: str, x: np.ndarray) -> float:
+    opts = SAOptions(backend=backend)
+    return time_call(lambda: build_suffix_array(x, opts), iters=2)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_sa_throughput.json",
+                    help="JSON artifact path ('' disables)")
+    args = ap.parse_args(argv)
+
     rng = np.random.default_rng(0)
-    print("# sa_throughput: builder, n, us, Mchars/s")
-    for n in (10_000, 50_000, 200_000):
+    records = []
+    print("# sa_throughput: backend, n, us, Mchars/s")
+    for n in SIZES:
         x = rng.integers(0, 256, size=n)
-        for name, fn in (
-            ("jax_dcv", lambda: suffix_array_jax(x)),
-            ("seq_ref", lambda: suffix_array_dcv(x)),
-            ("doubling", lambda: suffix_array_doubling(x)),
-        ):
-            if name == "seq_ref" and n > 50_000:
-                continue          # reference is the executable spec, slow
-            us = time_call(fn, iters=2)
-            emit(f"sa_throughput/{name}/n={n}", us,
-                 f"Mchars_s={n / us:.2f}")
+        for backend in registered_backends():
+            if backend == "bsp":
+                continue       # needs a multi-device mesh; see supersteps.py
+            if n > MAX_N.get(backend, n):
+                continue
+            us = bench_backend(backend, x)
+            mchars = n / us
+            emit(f"sa_throughput/{backend}/n={n}", us,
+                 f"Mchars_s={mchars:.2f}")
+            records.append({"backend": backend, "n": n, "us": round(us, 1),
+                            "mchars_per_s": round(mchars, 3)})
+
+    if args.out:
+        artifact = {
+            "bench": "sa_throughput",
+            "python": sys.version.split()[0],
+            "machine": platform.machine(),
+            "records": records,
+        }
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"# wrote {args.out} ({len(records)} records)")
+    return records
 
 
 if __name__ == "__main__":

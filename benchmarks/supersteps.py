@@ -35,15 +35,15 @@ def measured():
     src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                        "src"))
     code = textwrap.dedent("""
-    import jax, numpy as np
-    from jax.sharding import Mesh
-    from repro.bsp.suffix_array import suffix_array_bsp
+    import numpy as np
+    from repro.api import SAOptions, build_suffix_array
     from repro.bsp.counters import BSPCounters
-    mesh = Mesh(np.array(jax.devices()).reshape(8), ("bsp",))
+    from repro.launch.mesh import make_sa_mesh
     rng = np.random.default_rng(0)
     x = rng.integers(0, 2, size=4096)
     ct = BSPCounters()
-    suffix_array_bsp(x, mesh, base_threshold=64, counters=ct)
+    build_suffix_array(x, SAOptions(mesh=make_sa_mesh(8), base_threshold=64,
+                                    counters=ct))
     print(f"RESULT S={ct.supersteps} H={ct.comm_words} W={ct.work}")
     """)
     env = dict(os.environ)

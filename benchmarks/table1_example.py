@@ -1,9 +1,8 @@
 """Paper Table 1: the worked suffix-array example (correctness demo + the
-smallest end-to-end timing)."""
+smallest end-to-end timing), through the `repro.api` facade."""
 import numpy as np
 
-from repro.core.dcv_jax import suffix_array_jax
-from repro.core.seq_ref import suffix_array_dcv
+from repro.api import build_suffix_array
 
 from .bench_util import emit, time_call
 
@@ -12,9 +11,10 @@ WANT = [11, 3, 0, 4, 2, 8, 9, 1, 5, 7, 10, 6]
 
 
 def main():
-    assert suffix_array_dcv(X, base_threshold=4).tolist() == WANT
-    assert suffix_array_jax(X, base_threshold=4).tolist() == WANT
-    us = time_call(lambda: suffix_array_jax(X, base_threshold=4))
+    assert build_suffix_array(X, backend="seq", base_threshold=4).tolist() == WANT
+    assert build_suffix_array(X, backend="jax", base_threshold=4).tolist() == WANT
+    us = time_call(lambda: build_suffix_array(X, backend="jax",
+                                              base_threshold=4))
     emit("table1/worked_example", us, "match=exact")
 
 

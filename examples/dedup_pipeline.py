@@ -1,19 +1,30 @@
 """The paper inside the LM stack: suffix-array exact-substring dedup as a
 data-pipeline stage (Lee et al. 2022-style), feeding training batches.
+Suffix arrays are built through the `repro.api` facade — swap the backend
+(or hand the plan a mesh for the distributed builder) without touching the
+pipeline.
 
     PYTHONPATH=src python examples/dedup_pipeline.py
 """
 import numpy as np
 
+from repro.api import SAOptions, SuffixArrayIndex
 from repro.data.pipeline import PipelineConfig, TokenPipeline, synthetic_corpus
-from repro.text.dedup import find_duplicates
+from repro.text.dedup import find_duplicates, report_duplicates
 
 
 def main():
     corpus = synthetic_corpus(60_000, vocab=256, dup_fraction=0.35, seed=7)
-    rep = find_duplicates(corpus, min_len=64)
+    opts = SAOptions()                      # auto → jax (no mesh supplied)
+    print(f"backend: {opts.resolve_backend()}")
+
+    index = SuffixArrayIndex.build(corpus, opts)
+    rep = report_duplicates(index, min_len=64)
     print(f"corpus: {rep.n_chars} chars, duplicated: {rep.dup_chars} "
           f"({100 * rep.dup_fraction:.1f}%) across {len(rep.spans)} spans")
+    # the same index answers content queries before dedup runs
+    probe = corpus[100:116]
+    print(f"16-gram at offset 100 occurs {index.count(probe)}× pre-dedup")
 
     pipe = TokenPipeline(corpus, PipelineConfig(
         seq_len=128, global_batch=8, dedup=True, dedup_min_len=64))
@@ -22,7 +33,7 @@ def main():
     b = pipe.batch_at(0)
     print("first batch:", b["tokens"].shape, b["tokens"].dtype)
     # dedup is idempotent: a second pass finds (almost) nothing
-    rep2 = find_duplicates(pipe.corpus, min_len=64)
+    rep2 = find_duplicates(pipe.corpus, min_len=64, options=opts)
     print(f"residual duplication: {100 * rep2.dup_fraction:.2f}%")
 
 

@@ -1,27 +1,32 @@
 """Distributed suffix array on a multi-device mesh (the paper's Algorithm 3)
-with BSP cost instrumentation. Run with fake devices on CPU:
+through the `repro.api` facade: the same `build_suffix_array` call used on
+one device auto-selects the BSP backend the moment the plan carries a mesh.
+Run with fake devices on CPU:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/distributed_sa.py
 """
 import jax
 import numpy as np
-from jax.sharding import Mesh
 
+from repro.api import SAOptions, build_suffix_array
 from repro.bsp.counters import BSPCounters
-from repro.bsp.suffix_array import suffix_array_bsp
-from repro.core.oracle import suffix_array_doubling
+from repro.launch.mesh import make_sa_mesh
 
 
 def main():
     p = len(jax.devices())
-    mesh = Mesh(np.array(jax.devices()).reshape(p), ("bsp",))
+    mesh = make_sa_mesh()
     rng = np.random.default_rng(0)
     x = rng.integers(0, 3, size=5000)
+
     ct = BSPCounters()
-    sa = suffix_array_bsp(x, mesh, base_threshold=128, counters=ct)
-    assert np.array_equal(sa, suffix_array_doubling(x))
-    print(f"p={p} n={len(x)}: SA correct.")
+    opts = SAOptions(mesh=mesh, base_threshold=128, counters=ct)
+    assert opts.resolve_backend() == "bsp"   # mesh present → distributed
+    sa = build_suffix_array(x, opts)
+
+    assert np.array_equal(sa, build_suffix_array(x, backend="oracle"))
+    print(f"p={p} n={len(x)}: SA correct (backend={opts.resolve_backend()}).")
     print(f"BSP costs: S={ct.supersteps} supersteps, "
           f"H={ct.comm_words} words, W={ct.work} ops")
     print("per-superstep log (first 12):")

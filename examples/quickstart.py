@@ -1,36 +1,58 @@
-"""Quickstart: build a suffix array three ways (paper-faithful reference,
-vectorised JAX, naive oracle), verify they agree, and use it for LCP stats.
+"""Quickstart for the `repro.api` facade: build one suffix array on every
+registered backend, verify they agree, then use a `SuffixArrayIndex` for
+substring queries and corpus statistics.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Backend selection in one line: `build_suffix_array(x)` runs the vectorised
+JAX DC-v; `build_suffix_array(x, mesh=mesh)` runs the paper's distributed
+Algorithm 3 on that mesh; `backend="seq"`/"oracle" pin the paper-faithful
+reference / naive ground truth.
 """
 import numpy as np
 
-from repro.core.dcv_jax import suffix_array_jax
-from repro.core.oracle import suffix_array_naive
-from repro.core.seq_ref import SeqStats, suffix_array_dcv
-from repro.text.lcp import lcp_kasai, ngram_counts
+from repro.api import (SAOptions, SuffixArrayIndex, build_suffix_array,
+                       registered_backends)
+from repro.core.seq_ref import SeqStats
 
 
 def main():
     # the paper's Table 1 string: "acbaacedbbea$" over Σ = [0:12)
     x = np.array([0, 2, 1, 0, 0, 2, 4, 3, 1, 1, 4, 0])
-    sa_ref = suffix_array_dcv(x, base_threshold=4)
-    sa_jax = suffix_array_jax(x, base_threshold=4)
-    sa_naive = suffix_array_naive(x)
-    print("SA (paper Table 1):", sa_ref.tolist())
-    assert sa_ref.tolist() == sa_jax.tolist() == sa_naive.tolist()
+    results = {b: build_suffix_array(x, backend=b, base_threshold=4)
+               for b in registered_backends()}
+    print("SA (paper Table 1):", results["oracle"].tolist())
+    assert all(sa.tolist() == results["oracle"].tolist()
+               for sa in results.values()), results
+    print(f"{len(results)} backends agree: {', '.join(sorted(results))}")
 
-    # a bigger corpus with the accelerated schedule, instrumented
+    # a bigger corpus on the paper-faithful backend with the accelerated
+    # schedule, instrumented round by round
     rng = np.random.default_rng(0)
     big = rng.integers(0, 4, size=100_000)
     st = SeqStats()
-    sa = suffix_array_dcv(big, stats=st, base_threshold=64)
+    opts = SAOptions(backend="seq", stats=st, base_threshold=64)
+    index = SuffixArrayIndex.build(big, opts)
     print("accelerated-sampling rounds (v_i, |D_i|, n_i):")
     for r in st.rounds:
         print(f"  v={r['v']:4d} |D|={r['D']:2d} n={r['n']}")
-    lcp = lcp_kasai(big, sa)
-    print(f"max repeated substring length: {int(lcp.max())}")
-    print(f"distinct 8-grams: {ngram_counts(big, sa, lcp, 8)}")
+
+    # the index answers queries directly (lazy LCP, vectorised search)
+    print(f"max repeated substring length: {int(index.lcp.max())}")
+    print(f"8-gram stats: {index.ngram_stats(8)}")
+    pat = big[1234:1242]
+    hits = index.locate(pat)
+    print(f"pattern of len {len(pat)} occurs {index.count(pat)}× "
+          f"(first at {hits[0] if len(hits) else '-'})")
+    assert 1234 in hits
+
+    # multi-document corpora keep the sentinel-separator layout
+    docs = [rng.integers(0, 4, 500) for _ in range(3)]
+    docs[2][:120] = docs[0][100:220]         # plant cross-doc contamination
+    corpus = SuffixArrayIndex.from_docs(docs)
+    leaks = corpus.cross_doc_duplicates(min_len=64)
+    print(f"cross-doc repeats ≥ 64 chars: {len(leaks)} "
+          f"(docs {sorted(set((i, j) for i, j, _ in leaks))})")
 
 
 if __name__ == "__main__":

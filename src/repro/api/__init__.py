@@ -1,0 +1,72 @@
+"""repro.api — the unified suffix-array facade.
+
+This package is the single entry point for every suffix-array workload in
+the repo (dedup, corpus statistics, serving, benchmarks). It decouples
+*what* to build (a suffix array over a text or a multi-document corpus)
+from *how* it is built (which of the paper's construction algorithms runs,
+on which substrate).
+
+Three layers
+------------
+1. **Backend registry** (`registry`): string-keyed
+   `SuffixArrayBuilder` implementations. Built-ins::
+
+       "oracle"  O(n² log n) direct sort      — ground truth for tests
+       "seq"     paper Algorithm 1 (DC-v)     — executable specification
+       "jax"     vectorised DC-v on XLA       — single-device fast path
+       "bsp"     paper Algorithm 3 (shard_map) — distributed fast path
+
+   `register_backend(name, fn)` adds future substrates (Pallas kernels,
+   multi-host) without touching any consumer.
+
+2. **Plan** (`SAOptions` + `build_suffix_array`): one frozen dataclass
+   carrying every construction knob (`v0`, schedule, `base_threshold`,
+   mesh/axis, key packing, counters/stats sinks). Backend selection rules:
+
+   * ``backend="<name>"`` uses that registry entry, always.
+   * ``backend="auto"`` (default) resolves to ``"bsp"`` when
+     ``options.mesh`` is set, and to ``"jax"`` otherwise — so the same
+     call site scales from a laptop to a pod by passing a mesh.
+   * ``backend="bsp"`` with no mesh builds a 1-D mesh over all local
+     devices (`repro.launch.mesh.make_sa_mesh`).
+
+   All backends see identical normalised input (1-D int64, values ≥ 0) and
+   return identical results (np.int32[n]); the equivalence suite in
+   `tests/api/test_api.py` enforces agreement with the oracle.
+
+3. **Index** (`SuffixArrayIndex`): text + SA + lazily-computed LCP with
+   queries — `count` / `locate` (vectorised binary search),
+   `ngram_stats(k)`, `duplicate_spans(min_len)`,
+   `cross_doc_duplicates(min_len)`. `SuffixArrayIndex.from_docs` keeps the
+   sentinel-separator corpus layout previously hand-rolled in
+   `repro.text.corpus_sa` (now a deprecation shim over this class).
+
+Quickstart
+----------
+>>> import numpy as np
+>>> from repro.api import SAOptions, SuffixArrayIndex, build_suffix_array
+>>> x = np.array([0, 2, 1, 0, 0, 2, 4, 3, 1, 1, 4, 0])
+>>> build_suffix_array(x, backend="seq").tolist()
+[11, 3, 0, 4, 2, 8, 9, 1, 5, 7, 10, 6]
+>>> idx = SuffixArrayIndex.from_docs([[0, 1, 0], [1, 0, 1]])
+>>> idx.count([0, 1]), idx.count([1, 0])
+(2, 2)
+"""
+from .build import build_suffix_array
+from .index import NgramStats, SuffixArrayIndex, encode_docs
+from .options import SAOptions, SCHEDULES
+from .registry import (SuffixArrayBuilder, get_backend, register_backend,
+                       registered_backends)
+
+__all__ = [
+    "SAOptions",
+    "SCHEDULES",
+    "SuffixArrayBuilder",
+    "SuffixArrayIndex",
+    "NgramStats",
+    "build_suffix_array",
+    "encode_docs",
+    "get_backend",
+    "register_backend",
+    "registered_backends",
+]

@@ -1,0 +1,50 @@
+"""`build_suffix_array` — the one entry point for suffix-array construction.
+
+Validation, dtype normalisation, and trivial-input fast paths live here so
+every backend sees the same contract (int64 1-D text, values ≥ 0, n ≥ 2) and
+every caller gets the same result type (np.int32[n], a permutation of
+range(n)).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .options import SAOptions
+from .registry import get_backend
+
+
+def build_suffix_array(x, options: SAOptions | None = None,
+                       **overrides) -> np.ndarray:
+    """Suffix array of `x` under the plan `options`. Returns np.int32[n].
+
+    `x` is a 1-D sequence of non-negative integers (tokens/bytes).
+    Keyword overrides are applied on top of `options`, e.g.
+    ``build_suffix_array(x, backend="seq")`` or
+    ``build_suffix_array(x, opts, mesh=my_mesh)``.
+    """
+    opts = options if options is not None else SAOptions()
+    if overrides:
+        opts = opts.replace(**overrides)
+
+    x = np.asarray(x)
+    if x.ndim != 1:
+        raise ValueError(f"text must be 1-D, got shape {x.shape}")
+    if x.dtype.kind not in "iub":
+        raise TypeError(f"text must be integer-valued, got dtype {x.dtype}")
+    n = int(len(x))
+    x = x.astype(np.int64, copy=False)
+    if n and opts.validate and int(x.min()) < 0:
+        raise ValueError("text values must be ≥ 0 (negative values are "
+                         "reserved for pad/separator sentinels)")
+    if n == 0:
+        return np.zeros(0, dtype=np.int32)
+    if n == 1:
+        return np.zeros(1, dtype=np.int32)
+
+    sa = np.asarray(get_backend(opts.resolve_backend())(x, opts))
+    sa = sa.astype(np.int32, copy=False)
+    if opts.validate and sa.shape != (n,):
+        raise RuntimeError(
+            f"backend {opts.resolve_backend()!r} returned shape {sa.shape}, "
+            f"expected ({n},)")
+    return sa

@@ -1,0 +1,267 @@
+"""`SuffixArrayIndex` — text + suffix array + lazy LCP, with queries.
+
+One object subsumes the previous loose functions (`corpus_sa.CorpusSA`,
+`count_occurrences`, `cross_doc_duplicates`, `lcp.ngram_counts`,
+`repeated_substring_spans`) behind a single facade:
+
+* `SuffixArrayIndex.build(text, options)` — one document;
+* `SuffixArrayIndex.from_docs(docs, options)` — multi-document corpus with
+  the sentinel-separator layout (doc i is terminated by a unique separator
+  of value i placed BELOW the shifted data alphabet, so no suffix comparison
+  ever crosses a document boundary);
+* `count` / `locate` — binary search where every probe is one vectorised
+  numpy prefix comparison (no Python per-character loop);
+* `ngram_stats(k)` — total and distinct k-grams fully inside documents;
+* `duplicate_spans(min_len)` — merged repeated-substring spans (the Lee et
+  al. 2022 dedup criterion);
+* `cross_doc_duplicates(min_len)` — vectorised contamination check.
+
+The LCP array is computed lazily on first use and cached.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..text.lcp import lcp_kasai, repeated_substring_spans
+from .build import build_suffix_array
+from .options import SAOptions
+
+
+def encode_docs(docs) -> tuple[np.ndarray, np.ndarray, int]:
+    """Sentinel-separator corpus layout: data values are shifted up by
+    n_docs and doc i is terminated by separator value i. Separators are
+    (a) unique, so no suffix comparison crosses a document boundary, and
+    (b) below the data alphabet, so separator suffixes cluster at the front
+    of the SA where they are cheap to skip.
+
+    Returns (text int64[N], doc_starts int64[n_docs], n_docs).
+    """
+    n_docs = len(docs)
+    if n_docs == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64), 0
+    parts, starts, off = [], [], 0
+    for i, d in enumerate(docs):
+        d = np.asarray(d, np.int64)
+        if d.ndim != 1:
+            raise ValueError(f"doc {i} must be 1-D, got shape {d.shape}")
+        if len(d) and int(d.min()) < 0:
+            raise ValueError(f"doc {i} has negative values")
+        starts.append(off)
+        parts.append(d + n_docs)
+        parts.append(np.asarray([i], np.int64))
+        off += len(d) + 1
+    return (np.concatenate(parts), np.asarray(starts, np.int64), n_docs)
+
+
+@dataclass(frozen=True)
+class NgramStats:
+    """k-gram statistics over the indexed corpus (separator-free windows)."""
+
+    k: int
+    total: int        # number of k-gram positions fully inside one document
+    distinct: int     # number of distinct k-gram strings among those
+
+
+class SuffixArrayIndex:
+    """Queryable suffix-array index over one document or a corpus.
+
+    Positions returned by `locate` / `duplicate_spans` are offsets into the
+    *encoded* text (`self.text`); for a single-document index these equal
+    raw text offsets. Use `doc_of` / `doc_offset` to map a position into
+    (document, in-document offset) for multi-document indexes.
+    """
+
+    def __init__(self, text, sa, *, doc_starts=None, shift: int = 0,
+                 options: SAOptions | None = None, lcp=None):
+        self.text = np.asarray(text, np.int64)
+        self.sa = np.asarray(sa, np.int32)
+        if self.sa.shape != self.text.shape:
+            raise ValueError(f"sa shape {self.sa.shape} != text shape "
+                             f"{self.text.shape}")
+        n = len(self.text)
+        self.doc_starts = (np.asarray(doc_starts, np.int64)
+                           if doc_starts is not None
+                           else np.zeros(1 if n else 0, np.int64))
+        self.shift = int(shift)
+        self.options = options if options is not None else SAOptions()
+        self._lcp = None if lcp is None else np.asarray(lcp, np.int64)
+
+    # ----------------------------------------------------------- construct
+    @classmethod
+    def build(cls, text, options: SAOptions | None = None,
+              **overrides) -> "SuffixArrayIndex":
+        """Index a single document (no separators, positions = raw offsets)."""
+        opts = options if options is not None else SAOptions()
+        if overrides:
+            opts = opts.replace(**overrides)
+        text = np.asarray(text, np.int64)
+        sa = build_suffix_array(text, opts)
+        return cls(text, sa, shift=0, options=opts)
+
+    @classmethod
+    def from_docs(cls, docs, options: SAOptions | None = None,
+                  **overrides) -> "SuffixArrayIndex":
+        """Index a list of documents with the sentinel-separator layout."""
+        opts = options if options is not None else SAOptions()
+        if overrides:
+            opts = opts.replace(**overrides)
+        text, starts, n_docs = encode_docs(docs)
+        sa = build_suffix_array(text, opts)
+        return cls(text, sa, doc_starts=starts, shift=n_docs, options=opts)
+
+    # ----------------------------------------------------------- structure
+    @property
+    def n(self) -> int:
+        return len(self.text)
+
+    @property
+    def n_docs(self) -> int:
+        return len(self.doc_starts)
+
+    @property
+    def sep_count(self) -> int:
+        return self.shift          # one separator per document when encoded
+
+    @property
+    def lcp(self) -> np.ndarray:
+        """LCP array (Kasai), computed on first access and cached."""
+        if self._lcp is None:
+            self._lcp = lcp_kasai(self.text, self.sa)
+        return self._lcp
+
+    @property
+    def _doc_ends(self) -> np.ndarray:
+        """End (exclusive, separator position) of each document's payload."""
+        if self.shift == 0:
+            return np.full(self.n_docs, self.n, np.int64)
+        return np.flatnonzero(self.text < self.shift).astype(np.int64)
+
+    def doc_of(self, pos):
+        """Document index owning encoded position(s) `pos` (scalar or array)."""
+        idx = np.searchsorted(self.doc_starts, pos, side="right") - 1
+        if np.isscalar(pos) or np.ndim(pos) == 0:
+            return int(idx)
+        return idx.astype(np.int64)
+
+    def doc_offset(self, pos):
+        """(doc, in-document offset) for encoded position(s) `pos`."""
+        doc = self.doc_of(pos)
+        return doc, pos - self.doc_starts[doc]
+
+    # ------------------------------------------------------------- queries
+    def _encode_pattern(self, pattern) -> np.ndarray:
+        pat = np.asarray(pattern, np.int64).ravel()
+        if len(pat) and int(pat.min()) < 0:
+            raise ValueError("pattern values must be ≥ 0")
+        return pat + self.shift
+
+    def _suffix_cmp(self, starts: np.ndarray, pat: np.ndarray) -> np.ndarray:
+        """Vectorised 3-way prefix compare of suffixes at `starts` vs `pat`:
+        -1 suffix < pat, 0 pat is a prefix of suffix, +1 suffix > pat.
+        One numpy gather + compare per call — no Python character loop."""
+        starts = np.asarray(starts, np.int64).ravel()
+        m, n = len(pat), self.n
+        idx = starts[:, None] + np.arange(m, dtype=np.int64)[None, :]
+        in_range = idx < n
+        seg = np.where(in_range, self.text[np.minimum(idx, n - 1)],
+                       np.int64(-1))       # past-the-end < every real char
+        diff = seg != pat[None, :]
+        any_diff = diff.any(axis=1)
+        first = np.where(any_diff, diff.argmax(axis=1), 0)
+        rows = np.arange(len(starts))
+        out = np.zeros(len(starts), np.int8)
+        s_at, p_at = seg[rows, first], pat[first]
+        out[any_diff & (s_at < p_at)] = -1
+        out[any_diff & (s_at > p_at)] = 1
+        return out
+
+    def _sa_range(self, pat: np.ndarray) -> tuple[int, int]:
+        """[lo, hi) block of SA ranks whose suffixes start with `pat`.
+        Both binary-search bounds advance together; every probe is one
+        vectorised `_suffix_cmp` call → O(|pat| log n) numpy work total."""
+        n = len(self.sa)
+        if len(pat) == 0:
+            return 0, n
+        lo = np.zeros(2, np.int64)
+        hi = np.full(2, n, np.int64)
+        while True:
+            active = lo < hi
+            if not active.any():
+                break
+            mid = (lo + hi) // 2
+            c = self._suffix_cmp(self.sa[np.where(active, mid, 0)], pat)
+            # bound 0 = first suffix ≥ pat, bound 1 = first suffix > pat
+            before = np.array([c[0] < 0, c[1] <= 0])
+            lo = np.where(active & before, mid + 1, lo)
+            hi = np.where(active & ~before, mid, hi)
+        return int(lo[0]), int(lo[1])
+
+    def count(self, pattern) -> int:
+        """Occurrences of `pattern` across the corpus — O(m log n)."""
+        pat = self._encode_pattern(pattern)
+        if len(pat) == 0 or len(pat) > self.n:
+            return 0
+        lo, hi = self._sa_range(pat)
+        return hi - lo
+
+    def locate(self, pattern) -> np.ndarray:
+        """Sorted encoded start positions of every occurrence of `pattern`."""
+        pat = self._encode_pattern(pattern)
+        if len(pat) == 0 or len(pat) > self.n:
+            return np.zeros(0, np.int64)
+        lo, hi = self._sa_range(pat)
+        return np.sort(self.sa[lo:hi].astype(np.int64))
+
+    def locate_docs(self, pattern) -> np.ndarray:
+        """Occurrences as an int64[k, 2] array of (doc, in-doc offset)."""
+        pos = self.locate(pattern)
+        doc, off = self.doc_offset(pos)
+        return np.stack([np.asarray(doc, np.int64), off], axis=1)
+
+    # ---------------------------------------------------------- statistics
+    def ngram_stats(self, k: int) -> NgramStats:
+        """Total / distinct k-grams, counting only windows that lie fully
+        inside one document (never spanning a separator)."""
+        if k <= 0 or self.n == 0:
+            return NgramStats(k=k, total=0, distinct=0)
+        pos = self.sa.astype(np.int64)
+        if self.shift == 0:
+            valid = pos + k <= self.n
+        else:
+            ends = self._doc_ends
+            owner = np.searchsorted(self.doc_starts, pos, side="right") - 1
+            valid = pos + k <= ends[owner]
+        distinct = int(np.sum(valid & (self.lcp < k)))
+        return NgramStats(k=k, total=int(np.sum(valid)), distinct=distinct)
+
+    def duplicate_spans(self, min_len: int) -> list:
+        """Merged (start, end) spans covered by a substring of length ≥
+        min_len occurring at least twice (Lee et al. dedup criterion).
+        Separator uniqueness guarantees spans never cross documents."""
+        return repeated_substring_spans(self.text, self.sa, self.lcp, min_len)
+
+    def cross_doc_duplicates(self, min_len: int) -> list:
+        """(doc_i, doc_j, length) for SA-adjacent repeats ≥ min_len spanning
+        two DIFFERENT documents — fully vectorised (mask over lcp ≥ min_len
+        + batched searchsorted doc lookup)."""
+        lcp = self.lcp
+        r = np.flatnonzero(lcp >= min_len)
+        r = r[r >= 1]
+        if len(r) == 0:
+            return []
+        a = self.sa[r - 1].astype(np.int64)
+        b = self.sa[r].astype(np.int64)
+        da = np.searchsorted(self.doc_starts, a, side="right") - 1
+        db = np.searchsorted(self.doc_starts, b, side="right") - 1
+        hit = da != db
+        lo = np.minimum(da, db)[hit]
+        hi = np.maximum(da, db)[hit]
+        ln = lcp[r][hit]
+        return [(int(i), int(j), int(l)) for i, j, l in zip(lo, hi, ln)]
+
+    def __repr__(self) -> str:
+        return (f"SuffixArrayIndex(n={self.n}, n_docs={self.n_docs}, "
+                f"backend={self.options.resolve_backend()!r}, "
+                f"lcp={'cached' if self._lcp is not None else 'lazy'})")

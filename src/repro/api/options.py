@@ -1,0 +1,84 @@
+"""`SAOptions` — the single plan object for suffix-array construction.
+
+Every knob that used to be scattered across `suffix_array_dcv` /
+`suffix_array_jax` / `suffix_array_bsp` call sites (initial modulus `v0`,
+the v-schedule, recursion base threshold, the BSP mesh/axis, key packing,
+instrumentation sinks) lives here. Consumers construct one `SAOptions` and
+hand it to `repro.api.build_suffix_array`; backends read only the fields
+they understand.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Union
+
+from ..core.seq_ref import accelerated_next_v, fixed_next_v
+
+#: name → schedule fn; `SAOptions.schedule` accepts either the name or a raw
+#: ``(v, |D|, m) -> v'`` callable.
+SCHEDULES: dict[str, Callable[[int, int, int], int]] = {
+    "accelerated": accelerated_next_v,
+    "fixed": fixed_next_v,
+}
+
+AUTO = "auto"
+
+
+@dataclass(frozen=True)
+class SAOptions:
+    """Construction plan for one suffix-array build.
+
+    Fields
+    ------
+    backend:        registry key (``"oracle" | "seq" | "jax" | "bsp"``) or
+                    ``"auto"``: pick ``"bsp"`` when `mesh` is set, else
+                    ``"jax"``.
+    v0:             initial difference-cover modulus (paper Algorithm 1).
+    schedule:       ``"accelerated"`` (v' ~ v^{5/4}, the paper's headline),
+                    ``"fixed"`` (constant v baseline), or a callable
+                    ``(v, |D|, m) -> v'``.
+    base_threshold: recursion cutoff; ``None`` keeps each backend's native
+                    default (seq: 32, jax: 256, bsp: max(1024, n/p)).
+    mesh:           a 1-D ``jax.sharding.Mesh`` for the BSP backend. Setting
+                    it makes ``backend="auto"`` resolve to ``"bsp"``.
+    axis:           mesh axis name the BSP pipeline shards over.
+    pack_keys:      BSP radix key packing (§Perf SA-iteration A).
+    counters:       ``repro.bsp.counters.BSPCounters`` sink (BSP backend).
+    stats:          ``repro.core.seq_ref.SeqStats`` sink (seq backend).
+    validate:       check input values are non-negative ints before building.
+    """
+
+    backend: str = AUTO
+    v0: int = 3
+    schedule: Union[str, Callable[[int, int, int], int]] = "accelerated"
+    base_threshold: int | None = None
+    mesh: Any = None
+    axis: str = "bsp"
+    pack_keys: bool = True
+    counters: Any = None
+    stats: Any = None
+    validate: bool = True
+
+    def __post_init__(self):
+        if isinstance(self.schedule, str) and self.schedule not in SCHEDULES:
+            raise ValueError(
+                f"unknown schedule {self.schedule!r}; "
+                f"expected one of {sorted(SCHEDULES)} or a callable")
+        if self.v0 < 3:
+            raise ValueError(f"v0 must be ≥ 3 (difference covers), got {self.v0}")
+
+    @property
+    def schedule_fn(self) -> Callable[[int, int, int], int]:
+        if callable(self.schedule):
+            return self.schedule
+        return SCHEDULES[self.schedule]
+
+    def resolve_backend(self) -> str:
+        """Concrete registry key for this plan (applies the auto rule)."""
+        if self.backend != AUTO:
+            return self.backend
+        return "bsp" if self.mesh is not None else "jax"
+
+    def replace(self, **changes) -> "SAOptions":
+        return dataclasses.replace(self, **changes)

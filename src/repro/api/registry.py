@@ -1,0 +1,116 @@
+"""String-keyed registry of suffix-array construction backends.
+
+A backend is any callable ``(x: np.int64[n], options: SAOptions) ->
+integer[n]`` mapping a normalised non-negative text to its suffix array.
+Normalisation (dtype coercion, dimension/value checks, empty and length-1
+fast paths, output dtype) happens once in `repro.api.build.build_suffix_array`
+— backends only implement the algorithm.
+
+Built-ins registered on import:
+
+==========  ===============================================================
+``oracle``  O(n² log n) direct suffix sort (`repro.core.oracle`) — the
+            ground truth the equivalence suite compares everything against.
+``seq``     paper-faithful sequential DC-v, Algorithm 1
+            (`repro.core.seq_ref.suffix_array_dcv`).
+``jax``     vectorised single-device DC-v on XLA
+            (`repro.core.dcv_jax.suffix_array_jax`).
+``bsp``     Algorithm 3 on a 1-D shard_map mesh
+            (`repro.bsp.suffix_array.suffix_array_bsp`); builds a mesh over
+            all local devices when `options.mesh` is None.
+==========  ===============================================================
+
+`register_backend` exists so future substrates (Pallas kernels, multi-host)
+plug in without touching consumers.
+"""
+from __future__ import annotations
+
+from typing import Callable, Protocol
+
+import numpy as np
+
+from .options import SAOptions
+
+
+class SuffixArrayBuilder(Protocol):
+    """Backend contract: normalised text + plan → suffix array."""
+
+    def __call__(self, x: np.ndarray, options: SAOptions) -> np.ndarray: ...
+
+
+_REGISTRY: dict[str, SuffixArrayBuilder] = {}
+
+
+def register_backend(name: str, builder: SuffixArrayBuilder, *,
+                     overwrite: bool = False) -> SuffixArrayBuilder:
+    """Register `builder` under `name`. Returns the builder (decorator-safe)."""
+    if not overwrite and name in _REGISTRY:
+        raise ValueError(f"backend {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    _REGISTRY[name] = builder
+    return builder
+
+
+def get_backend(name: str) -> SuffixArrayBuilder:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown suffix-array backend {name!r}; "
+                       f"registered: {registered_backends()}") from None
+
+
+def registered_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# --------------------------------------------------------------------------
+# built-in backends
+# --------------------------------------------------------------------------
+#: above this length the oracle switches from the O(n² log n) direct sort to
+#: the O(n log² n) prefix-doubling oracle (both are reference implementations;
+#: the direct sort materialises every suffix as a Python tuple).
+_ORACLE_NAIVE_MAX = 2048
+
+
+def _oracle_backend(x: np.ndarray, options: SAOptions) -> np.ndarray:
+    from ..core.oracle import suffix_array_doubling, suffix_array_naive
+    if len(x) <= _ORACLE_NAIVE_MAX:
+        return suffix_array_naive(x)
+    return suffix_array_doubling(x)
+
+
+def _seq_backend(x: np.ndarray, options: SAOptions) -> np.ndarray:
+    from ..core.seq_ref import suffix_array_dcv
+    kw = {"v": options.v0, "schedule": options.schedule_fn,
+          "stats": options.stats}
+    if options.base_threshold is not None:
+        kw["base_threshold"] = options.base_threshold
+    return suffix_array_dcv(x, **kw)
+
+
+def _jax_backend(x: np.ndarray, options: SAOptions) -> np.ndarray:
+    from ..core.dcv_jax import suffix_array_jax
+    kw = {"v": options.v0, "schedule": options.schedule_fn}
+    if options.base_threshold is not None:
+        kw["base_threshold"] = options.base_threshold
+    return suffix_array_jax(x, **kw)
+
+
+def _bsp_backend(x: np.ndarray, options: SAOptions) -> np.ndarray:
+    from ..bsp.counters import NULL_COUNTERS
+    from ..bsp.suffix_array import suffix_array_bsp
+    mesh = options.mesh
+    if mesh is None:
+        from ..launch.mesh import make_sa_mesh
+        mesh = make_sa_mesh(axis=options.axis)
+    return suffix_array_bsp(
+        x, mesh, axis=options.axis, v=options.v0,
+        schedule=options.schedule_fn, base_threshold=options.base_threshold,
+        counters=options.counters or NULL_COUNTERS,
+        pack_keys=options.pack_keys)
+
+
+register_backend("oracle", _oracle_backend)
+register_backend("seq", _seq_backend)
+register_backend("jax", _jax_backend)
+register_backend("bsp", _bsp_backend)

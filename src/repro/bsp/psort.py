@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.bitonic import bitonic_sort, next_pow2
+from ..core.compat import shard_map
 from .exchange import exchange
 from .primitives import lex_lt_rows, searchsorted_rows
 
@@ -152,7 +153,7 @@ def run_psort(mesh, axis: str, rows_global, *, lt_fn=None, local_sort=None):
     @functools.partial(jax.jit, out_shardings=(
         NamedSharding(mesh, P(axis)), NamedSharding(mesh, P())))
     @functools.partial(
-        jax.shard_map, mesh=mesh, in_specs=(P(axis),),
+        shard_map, mesh=mesh, in_specs=(P(axis),),
         out_specs=(P(axis), P()))
     def fn(rows):
         out, over = psort_shard_body(rows, p=p, axis=axis, lt_fn=lt_fn,

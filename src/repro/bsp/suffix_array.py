@@ -29,6 +29,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.bitonic import lex_lt_int
+from ..core.compat import shard_map
 from ..core.difference_cover import cover_tables
 from ..core.dcv_jax import suffix_array_jax
 from ..core.seq_ref import accelerated_next_v
@@ -226,7 +227,7 @@ def _sm1(xg, *, p, v, n_loc, m_loc, vkey, axis, mesh_holder, sigma=None):
     tabs = cover_tables(v)
     body = functools.partial(_sm1_body, p=p, v=v, n_loc=n_loc, m_loc=m_loc,
                              tabs=tabs, axis=axis, sigma=sigma)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, in_specs=(P(axis),),
         out_specs=(P(axis), P(axis), P(axis)))(xg)
 
@@ -239,7 +240,7 @@ def _sm2(xg, sa_rank, *, p, v, n_loc, m_loc, vkey, axis, mesh_holder):
     tabs = cover_tables(v)
     body = functools.partial(_sm2_body, p=p, v=v, n_loc=n_loc, m_loc=m_loc,
                              tabs=tabs, axis=axis)
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh, in_specs=(P(axis), P(axis)),
         out_specs=(P(axis), P(axis)))(xg, sa_rank)
 
@@ -300,6 +301,13 @@ def suffix_array_bsp(
     x = np.asarray(x)
     n = int(len(x))
     p = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    if p == 1:
+        # degenerate mesh: Algorithm 2's splitter machinery needs p ≥ 2;
+        # a 1-processor BSP run IS the single-device algorithm.
+        counters.superstep("base/gather", h=n, w=n * 4)
+        return suffix_array_jax(
+            x, v=max(v, 3), schedule=schedule,
+            base_threshold=base_threshold or 256).astype(np.int32)
     n0 = _n0 or n
     if base_threshold is None:
         base_threshold = max(1024, n0 // p)

@@ -1,5 +1,9 @@
 """The paper's own workload: distributed suffix-array construction configs
-(corpus size, v schedule) for benchmarks and the SA dry-run."""
+(corpus size, backend, v schedule) for benchmarks and the SA dry-run.
+
+`SAConfig` is a thin, frozen launch-config wrapper; the executable plan is
+the `repro.api.SAOptions` it produces via `to_options()`.
+"""
 from dataclasses import dataclass
 
 
@@ -7,9 +11,24 @@ from dataclasses import dataclass
 class SAConfig:
     name: str = "suffix-array"
     n: int = 1 << 20            # corpus length (characters)
+    backend: str = "auto"       # registry key, or "auto" (mesh → bsp)
     v0: int = 3
     schedule: str = "accelerated"   # or "fixed"
     base_threshold: int = 4096
+    pack_keys: bool = True
+    axis: str = "bsp"
+
+    def to_options(self, *, mesh=None, counters=None, stats=None):
+        """The `repro.api.SAOptions` plan this config describes. Runtime
+        objects (mesh, instrumentation sinks) are supplied here — they do
+        not belong in a frozen launch config."""
+        from ..api import SAOptions
+        return SAOptions(backend=self.backend, v0=self.v0,
+                         schedule=self.schedule,
+                         base_threshold=self.base_threshold,
+                         mesh=mesh, axis=self.axis,
+                         pack_keys=self.pack_keys,
+                         counters=counters, stats=stats)
 
 
 CONFIG = SAConfig()

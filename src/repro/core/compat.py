@@ -1,0 +1,29 @@
+"""Version compatibility shims for the host jax.
+
+`jax.shard_map` was promoted out of `jax.experimental.shard_map` only in
+newer jax releases; the baked-in toolchain may predate that. Import
+`shard_map` from here instead of from jax directly so both layouts work.
+`check_rep` is disabled on the experimental fallback: the BSP layer's
+collective patterns (ppermute halos + capacity-bounded all-to-all) are not
+expressible under its replication checker.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - exercised only on older jax
+    from jax.experimental.shard_map import shard_map as _shard_map_experimental
+
+    @functools.wraps(_shard_map_experimental)
+    def shard_map(f=None, *, mesh, in_specs, out_specs, **kw):
+        kw.setdefault("check_rep", False)
+        if f is None:
+            return functools.partial(_shard_map_experimental, mesh=mesh,
+                                     in_specs=in_specs, out_specs=out_specs,
+                                     **kw)
+        return _shard_map_experimental(f, mesh=mesh, in_specs=in_specs,
+                                       out_specs=out_specs, **kw)

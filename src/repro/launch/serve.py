@@ -3,6 +3,14 @@ ring-buffer KV caches / recurrent states.
 
     python -m repro.launch.serve --arch rwkv6-1.6b --smoke --prompt-len 16 \\
         --gen 32 --batch 4
+
+The paper's own workload is served here too: `--arch suffix-array` builds a
+`repro.api.SuffixArrayIndex` over a synthetic corpus through the facade
+(BSP backend on a mesh when more than one device is visible, vectorised JAX
+otherwise) and answers a batch of substring count/locate queries.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        python -m repro.launch.serve --arch suffix-array --smoke --queries 64
 """
 from __future__ import annotations
 
@@ -45,6 +53,47 @@ def prefill_then_decode(params, cfg, prompts, gen: int, *, enc_out=None,
     return jnp.concatenate(out, axis=1)
 
 
+def serve_sa_queries(cfg, *, n_chars: int, n_docs: int, n_queries: int,
+                     pattern_len: int = 16, seed: int = 0):
+    """Build a `SuffixArrayIndex` through the facade and serve substring
+    queries against it. Backend selection is the facade's auto rule: a 1-D
+    mesh over all devices when p > 1 (the paper's Algorithm 3), else the
+    vectorised single-device DC-v."""
+    from ..api import SuffixArrayIndex
+    from .mesh import make_sa_mesh
+
+    mesh = make_sa_mesh() if len(jax.devices()) > 1 else None
+    opts = cfg.to_options(mesh=mesh)
+    rng = np.random.default_rng(seed)
+    doc_len = max(n_chars // max(n_docs, 1), pattern_len + 1)
+    docs = [rng.integers(0, 256, size=doc_len) for _ in range(n_docs)]
+
+    t0 = time.time()
+    index = SuffixArrayIndex.from_docs(docs, opts)
+    build_s = time.time() - t0
+    print(f"indexed {index.n} chars / {index.n_docs} docs in {build_s:.2f}s "
+          f"(backend={opts.resolve_backend()})")
+
+    # half the queries are planted substrings (must hit), half random
+    hits = 0
+    t0 = time.time()
+    for q in range(n_queries):
+        if q % 2 == 0:
+            d = rng.integers(0, n_docs)
+            at = rng.integers(0, doc_len - pattern_len)
+            pat = docs[d][at:at + pattern_len]
+        else:
+            pat = rng.integers(0, 256, size=pattern_len)
+        c = index.count(pat)
+        if q % 2 == 0:
+            assert c >= 1 and len(index.locate(pat)) == c
+        hits += int(c > 0)
+    dt = time.time() - t0
+    print(f"served {n_queries} count/locate queries in {dt:.3f}s "
+          f"({n_queries / max(dt, 1e-9):.0f} qps), {hits} hit")
+    return index
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -53,9 +102,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--queries", type=int, default=64,
+                    help="query count for --arch suffix-array")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
+    if getattr(cfg, "name", "") == "suffix-array":
+        n_chars = 20_000 if args.smoke else cfg.n
+        return serve_sa_queries(cfg, n_chars=n_chars, n_docs=args.batch,
+                                n_queries=args.queries,
+                                pattern_len=args.prompt_len)
     if args.smoke:
         cfg = cfg.smoke()
     params, _ = lm_init(jax.random.PRNGKey(0), cfg)

@@ -12,6 +12,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..bsp.primitives import within_group_index
+from ..core.compat import shard_map
 from .layers import COMPUTE_DTYPE, activation
 
 
@@ -236,7 +237,7 @@ def moe_layer(p, cfg, x, *, mesh=None, dp_axes=("pod", "data"),
         return out.reshape(Bl, Sl, d), aux[None]
 
     x_seq_spec = None if decode_path else tp_axis
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         body, mesh=mesh,
         in_specs=(P(dp_spec, x_seq_spec, None), P(), P(tp_axis, None, None),
                   P(tp_axis, None, None), P(tp_axis, None, None)),

@@ -1,15 +1,24 @@
-"""Multi-document corpus suffix arrays: concatenate documents with unique
-low sentinels so suffixes never compare across document boundaries, then
-build ONE suffix array for the whole corpus (the layout used by Lee et al.
-dedup across documents and by cross-document n-gram statistics).
+"""DEPRECATED shim — use `repro.api.SuffixArrayIndex` instead.
+
+The multi-document sentinel-separator corpus layout and all queries now
+live in `repro.api.index.SuffixArrayIndex` (`from_docs`, `count`, `locate`,
+`cross_doc_duplicates`). This module keeps the old `CorpusSA` struct and
+free functions working on top of the facade for existing callers; each
+entry point emits a DeprecationWarning.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
 
-from ..core.dcv_jax import suffix_array_jax
+from ..api import SAOptions, SuffixArrayIndex, encode_docs
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"repro.text.corpus_sa.{old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
 
 
 @dataclass
@@ -20,87 +29,49 @@ class CorpusSA:
     n_docs: int
     sep_count: int            # separators (excluded from queries)
 
-    def doc_of(self, pos: int) -> int:
-        """Document index owning text position pos."""
-        return int(np.searchsorted(self.doc_starts, pos, side="right") - 1)
+    def doc_of(self, pos):
+        """Document index owning text position(s) `pos` (scalar or array)."""
+        return self.as_index().doc_of(pos)
+
+    def as_index(self) -> SuffixArrayIndex:
+        """The `repro.api.SuffixArrayIndex` view of this struct."""
+        return SuffixArrayIndex(self.text, self.sa,
+                                doc_starts=self.doc_starts,
+                                shift=self.n_docs)
 
 
-def build_corpus_sa(docs: list, sa_builder=suffix_array_jax) -> CorpusSA:
-    """docs: list of int arrays (values ≥ 0). Documents are joined with
-    distinct ascending separators placed BELOW the data alphabet, so (a) no
-    suffix comparison crosses a document boundary (the separator differs),
-    and (b) separator suffixes cluster at the front of the SA where they are
-    cheap to skip."""
+def build_corpus_sa(docs: list, sa_builder=None,
+                    options: SAOptions | None = None) -> CorpusSA:
+    """DEPRECATED: use `SuffixArrayIndex.from_docs(docs, options)`.
+
+    `sa_builder` (legacy) is honoured when given: it is called directly on
+    the encoded text. Otherwise the facade picks the backend from `options`
+    (default: auto → jax, or bsp when a mesh is set)."""
+    _deprecated("build_corpus_sa", "repro.api.SuffixArrayIndex.from_docs")
     n_docs = len(docs)
     if n_docs == 0:
         return CorpusSA(np.zeros(0, np.int32), np.zeros(0, np.int32),
                         np.zeros(0, np.int64), 0, 0)
-    # shift data up by n_docs; separator for doc i gets value i
-    parts = []
-    starts = []
-    off = 0
-    for i, d in enumerate(docs):
-        d = np.asarray(d, np.int64) + n_docs
-        starts.append(off)
-        parts.append(d)
-        parts.append(np.asarray([i], np.int64))
-        off += len(d) + 1
-    text = np.concatenate(parts)
-    sa = np.asarray(sa_builder(text), np.int64)
-    return CorpusSA(text=text.astype(np.int32), sa=sa.astype(np.int32),
-                    doc_starts=np.asarray(starts, np.int64),
-                    n_docs=n_docs, sep_count=n_docs)
+    if sa_builder is not None:
+        text, starts, n_docs = encode_docs(docs)
+        sa = np.asarray(sa_builder(text), np.int64)
+        index = SuffixArrayIndex(text, sa, doc_starts=starts, shift=n_docs)
+    else:
+        index = SuffixArrayIndex.from_docs(docs, options)
+    return CorpusSA(text=index.text.astype(np.int32),
+                    sa=index.sa.astype(np.int32),
+                    doc_starts=index.doc_starts,
+                    n_docs=index.n_docs, sep_count=index.sep_count)
 
 
 def count_occurrences(csa: CorpusSA, pattern) -> int:
-    """Number of occurrences of `pattern` across all documents, via binary
-    search on the suffix array — O(|pattern| log n)."""
-    pat = np.asarray(pattern, np.int64) + csa.n_docs
-    text, sa = csa.text.astype(np.int64), csa.sa
-    n, m = len(text), len(pat)
-
-    def cmp_at(i):
-        """-1/0/+1 of suffix i vs pattern (prefix compare)."""
-        seg = text[i:i + m]
-        if len(seg) < m:
-            pad = np.full(m - len(seg), -1, np.int64)
-            seg = np.concatenate([seg, pad])
-        for a, b in zip(seg, pat):
-            if a < b:
-                return -1
-            if a > b:
-                return 1
-        return 0
-
-    lo, hi = 0, n
-    while lo < hi:                       # first suffix ≥ pattern
-        mid = (lo + hi) // 2
-        if cmp_at(int(sa[mid])) < 0:
-            lo = mid + 1
-        else:
-            hi = mid
-    first = lo
-    lo, hi = first, n
-    while lo < hi:                       # first suffix > pattern
-        mid = (lo + hi) // 2
-        if cmp_at(int(sa[mid])) <= 0:
-            lo = mid + 1
-        else:
-            hi = mid
-    return lo - first
+    """DEPRECATED: use `SuffixArrayIndex.count(pattern)`."""
+    _deprecated("count_occurrences", "repro.api.SuffixArrayIndex.count")
+    return csa.as_index().count(pattern)
 
 
 def cross_doc_duplicates(csa: CorpusSA, min_len: int):
-    """(doc_i, doc_j, length) for maximal repeats ≥ min_len that span two
-    DIFFERENT documents (contamination check)."""
-    from .lcp import lcp_kasai
-    lcp = lcp_kasai(csa.text, csa.sa)
-    out = []
-    for r in range(1, len(csa.sa)):
-        l = int(lcp[r])
-        if l >= min_len:
-            a, b = int(csa.sa[r - 1]), int(csa.sa[r])
-            da, db = csa.doc_of(a), csa.doc_of(b)
-            if da != db:
-                out.append((min(da, db), max(da, db), l))
-    return out
+    """DEPRECATED: use `SuffixArrayIndex.cross_doc_duplicates(min_len)`."""
+    _deprecated("cross_doc_duplicates",
+                "repro.api.SuffixArrayIndex.cross_doc_duplicates")
+    return csa.as_index().cross_doc_duplicates(min_len)

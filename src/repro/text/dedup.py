@@ -1,15 +1,20 @@
 """Exact-substring deduplication powered by the paper's suffix arrays
 (Lee et al. 2022 "Deduplicating Training Data Makes Language Models Better"
 uses suffix arrays for exactly this; our distributed builder makes the SA
-step scale with the training mesh)."""
+step scale with the training mesh).
+
+Construction goes through the `repro.api` facade: pass an `SAOptions` to
+pick the backend (`jax` by default, `bsp` when the plan carries a mesh).
+The legacy `sa_builder=` kwarg still works but is deprecated.
+"""
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
 
-from ..core.dcv_jax import suffix_array_jax
-from .lcp import lcp_kasai, repeated_substring_spans
+from ..api import SAOptions, SuffixArrayIndex
 
 
 @dataclass
@@ -23,42 +28,57 @@ class DedupReport:
         return self.dup_chars / max(self.n_chars, 1)
 
 
+def _index_of(corpus: np.ndarray, sa_builder, options: SAOptions | None
+              ) -> SuffixArrayIndex:
+    if sa_builder is not None:
+        warnings.warn("dedup(sa_builder=...) is deprecated; pass "
+                      "options=SAOptions(backend=...) instead",
+                      DeprecationWarning, stacklevel=3)
+        return SuffixArrayIndex(corpus, np.asarray(sa_builder(corpus)))
+    return SuffixArrayIndex.build(corpus, options)
+
+
 def find_duplicates(corpus: np.ndarray, min_len: int = 32,
-                    sa_builder=suffix_array_jax) -> DedupReport:
+                    sa_builder=None, options: SAOptions | None = None
+                    ) -> DedupReport:
     corpus = np.asarray(corpus)
-    sa = sa_builder(corpus)
-    lcp = lcp_kasai(corpus, sa)
-    spans = repeated_substring_spans(corpus, sa, lcp, min_len)
+    index = _index_of(corpus, sa_builder, options)
+    return report_duplicates(index, min_len)
+
+
+def report_duplicates(index: SuffixArrayIndex, min_len: int) -> DedupReport:
+    """DedupReport from an already-built index (SA/LCP are reused)."""
+    spans = index.duplicate_spans(min_len)
     dup = sum(e - s for s, e in spans)
-    return DedupReport(n_chars=len(corpus), dup_chars=int(dup), spans=spans)
+    return DedupReport(n_chars=index.n, dup_chars=int(dup), spans=spans)
 
 
 def dedup_corpus(corpus: np.ndarray, min_len: int = 32,
-                 sa_builder=suffix_array_jax, keep_first: bool = True
+                 sa_builder=None, keep_first: bool = True,
+                 options: SAOptions | None = None
                  ) -> tuple[np.ndarray, DedupReport]:
     """Remove all-but-first occurrences of repeated substrings ≥ min_len.
 
     Conservative variant: drops later duplicate spans wholesale (the Lee et
-    al. policy); returns (deduped_corpus, report)."""
+    al. policy); returns (deduped_corpus, report). The SA and LCP are built
+    once and shared between the report and the drop mask."""
     corpus = np.asarray(corpus)
-    report = find_duplicates(corpus, min_len, sa_builder)
+    index = _index_of(corpus, sa_builder, options)
+    report = report_duplicates(index, min_len)
     if not report.spans:
         return corpus, report
-    # keep the FIRST occurrence of each duplicated string: recompute spans
-    # keyed by content start order — simple policy: sort spans, always keep
-    # the first span of an overlap chain, drop the rest.
-    drop = np.zeros(len(corpus), dtype=bool)
-    seen_starts = set()
-    sa = sa_builder(corpus)
-    lcp = lcp_kasai(corpus, sa)
-    for r in range(1, len(sa)):
-        l = int(lcp[r])
-        if l >= min_len:
-            a, b = int(sa[r - 1]), int(sa[r])
-            first, later = (a, b) if a < b else (b, a)
-            if keep_first:
-                drop[later:later + l] = True
-            else:
-                drop[first:first + l] = True
+    # keep the FIRST occurrence of each duplicated string: for every
+    # SA-adjacent pair with lcp ≥ min_len, drop the later (greater-position)
+    # copy. Vectorised interval painting: +1/-1 deltas, cumsum > 0.
+    n = index.n
+    sa, lcp = index.sa.astype(np.int64), index.lcp
+    r = np.flatnonzero(lcp >= min_len)
+    r = r[r >= 1]
+    a, b = sa[r - 1], sa[r]
+    target = np.maximum(a, b) if keep_first else np.minimum(a, b)
+    delta = np.zeros(n + 1, np.int64)
+    np.add.at(delta, target, 1)
+    np.add.at(delta, np.minimum(target + lcp[r], n), -1)
+    drop = np.cumsum(delta[:-1]) > 0
     out = corpus[~drop]
     return out, report

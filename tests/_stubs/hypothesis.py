@@ -1,0 +1,174 @@
+"""Minimal deterministic stand-in for the `hypothesis` package.
+
+The container image does not ship `hypothesis`, and the tier-1 suite must run
+without installing anything. This stub implements the tiny slice of the API
+the tests use — `given`, `settings`, and the `strategies` constructors
+`integers / booleans / lists / tuples / sampled_from / just / floats` — as a
+deterministic random sampler: each test gets a PRNG seeded from its qualified
+name, so runs are reproducible and failures replayable. No shrinking, no
+database, no phases. `tests/conftest.py` puts this directory on sys.path ONLY
+when the real hypothesis is not importable, so environments that do have it
+(e.g. CI) use the real thing.
+"""
+from __future__ import annotations
+
+import functools
+import zlib
+
+
+class SearchStrategy:
+    """A strategy is just a draw function rng -> value."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self.draw(rng)))
+
+    def filter(self, pred, _tries: int = 100):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self.draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return SearchStrategy(draw)
+
+
+def _as_strategy(obj) -> SearchStrategy:
+    if isinstance(obj, SearchStrategy):
+        return obj
+    raise TypeError(f"expected a strategy, got {obj!r}")
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value=-(2 ** 31), max_value=2 ** 31 - 1):
+        return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return SearchStrategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None, unique=False):
+        elements = _as_strategy(elements)
+
+        def draw(rng):
+            hi = max_size if max_size is not None else min_size + 10
+            # bias toward small sizes like real hypothesis (half the draws)
+            size = (rng.randint(min_size, max(min_size, (min_size + hi) // 2))
+                    if rng.random() < 0.5 else rng.randint(min_size, hi))
+            out, seen = [], set()
+            tries = 0
+            while len(out) < size and tries < 50 * (size + 1):
+                v = elements.draw(rng)
+                tries += 1
+                if unique:
+                    key = v if not isinstance(v, list) else tuple(v)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                out.append(v)
+            return out
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def tuples(*strats):
+        strats = tuple(_as_strategy(s) for s in strats)
+        return SearchStrategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        if not seq:
+            raise ValueError("sampled_from requires a non-empty collection")
+        return SearchStrategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    @staticmethod
+    def just(value):
+        return SearchStrategy(lambda rng: value)
+
+    @staticmethod
+    def one_of(*strats):
+        strats = tuple(_as_strategy(s) for s in strats)
+        return SearchStrategy(
+            lambda rng: strats[rng.randrange(len(strats))].draw(rng))
+
+
+strategies = _Strategies()
+
+
+class settings:
+    """Decorator/record: only max_examples is honoured; deadline et al. are
+    accepted and ignored (the stub never times out a test body)."""
+
+    default_max_examples = 20
+
+    def __init__(self, max_examples: int = 20, deadline=None, **_kw):
+        self.max_examples = int(max_examples)
+
+    def __call__(self, fn):
+        fn._hyp_settings = self
+        return fn
+
+
+def given(*arg_strats, **kw_strats):
+    arg_strats = tuple(_as_strategy(s) for s in arg_strats)
+    kw_strats = {k: _as_strategy(s) for k, s in kw_strats.items()}
+
+    def decorate(fn):
+        import random
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = (getattr(wrapper, "_hyp_settings", None)
+                   or getattr(fn, "_hyp_settings", None))
+            n = cfg.max_examples if cfg else settings.default_max_examples
+            seed = zlib.crc32(fn.__qualname__.encode())  # stable across runs
+            rng = random.Random(seed)
+            for i in range(n):
+                drawn = [s.draw(rng) for s in arg_strats]
+                kdrawn = {k: s.draw(rng) for k, s in kw_strats.items()}
+                try:
+                    fn(*args, *drawn, **kwargs, **kdrawn)
+                except Exception:
+                    print(f"hypothesis-stub: falsifying example "
+                          f"(run {i}): args={drawn!r} kwargs={kdrawn!r}")
+                    raise
+        # pytest must see a zero-arg signature, not fn's drawn params
+        # (it would otherwise look for fixtures named after them).
+        del wrapper.__wrapped__
+        wrapper.is_hypothesis_test = True
+        return wrapper
+    return decorate
+
+
+def example(*_a, **_k):
+    """@example is a no-op in the stub (explicit examples are not replayed)."""
+    def decorate(fn):
+        return fn
+    return decorate
+
+
+class HealthCheck:
+    too_slow = data_too_large = filter_too_much = all = None
+
+    @staticmethod
+    def all():  # type: ignore[misc]
+        return []
+
+
+def assume(condition) -> bool:
+    """Raise-free approximation: silently accept (stub draws are unshrunk)."""
+    return bool(condition)
+
+
+__version__ = "0.0.0-repro-stub"

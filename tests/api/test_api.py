@@ -1,0 +1,279 @@
+"""Equivalence + contract tests for the `repro.api` facade.
+
+Every registered backend must agree with the oracle on random strings,
+repetitive strings, tiny/empty inputs, and multi-document corpora; the
+plan object round-trips; the legacy `repro.text.corpus_sa` /
+`repro.text.dedup` shims keep working (with DeprecationWarnings).
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import (SAOptions, SuffixArrayIndex, build_suffix_array,
+                       encode_docs, get_backend, register_backend,
+                       registered_backends)
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "src"))
+BACKENDS = registered_backends()
+
+
+def _naive_sa(x):
+    x = np.asarray(x, np.int64)
+    return np.asarray(sorted(range(len(x)), key=lambda i: tuple(x[i:])),
+                      np.int64)
+
+
+def _cases():
+    rng = np.random.default_rng(42)
+    cases = {
+        "empty": np.zeros(0, np.int64),
+        "single": np.asarray([5]),
+        "pair": np.asarray([1, 0]),
+        "all-equal": np.zeros(97, np.int64),
+        "period-2": np.tile([0, 1], 60),
+        "descending": np.arange(50)[::-1].copy(),
+        "fibonacci-word": None,   # filled below — maximally repetitive
+    }
+    fib = [0]
+    a, b = [0], [0, 1]
+    while len(b) < 120:
+        a, b = b, b + a
+    cases["fibonacci-word"] = np.asarray(b[:120])
+    for sigma in (2, 4, 26):
+        cases[f"random-s{sigma}"] = rng.integers(0, sigma, size=150)
+    return cases
+
+
+CASES = _cases()
+
+
+# ------------------------------------------------------------- equivalence
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_backend_matches_oracle(backend, case):
+    x = CASES[case]
+    got = build_suffix_array(x, backend=backend)
+    assert got.dtype == np.int32
+    assert np.array_equal(got, _naive_sa(x)), (backend, case)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backend_multidoc_matches_oracle(backend):
+    rng = np.random.default_rng(7)
+    docs = [rng.integers(0, 3, size=int(rng.integers(1, 40)))
+            for _ in range(4)] + [np.zeros(0, np.int64)]
+    text, starts, n_docs = encode_docs(docs)
+    got = build_suffix_array(text, backend=backend)
+    assert np.array_equal(got, _naive_sa(text)), backend
+    idx = SuffixArrayIndex.from_docs(docs, backend=backend)
+    assert np.array_equal(idx.sa, got)
+    assert idx.n_docs == n_docs == 5 and idx.sep_count == 5
+
+
+def test_all_backends_identical_results():
+    """The acceptance criterion verbatim: identical SAs across backends."""
+    rng = np.random.default_rng(3)
+    for _ in range(3):
+        x = rng.integers(0, 5, size=int(rng.integers(2, 200)))
+        sas = {b: build_suffix_array(x, SAOptions(backend=b)).tolist()
+               for b in BACKENDS}
+        assert len({tuple(v) for v in sas.values()}) == 1, sas
+
+
+# ------------------------------------------------------------------- plan
+def test_options_defaults_and_auto_rule():
+    opts = SAOptions()
+    assert opts.backend == "auto" and opts.resolve_backend() == "jax"
+    assert opts.v0 == 3 and opts.schedule == "accelerated"
+    assert opts.base_threshold is None and opts.mesh is None
+    assert SAOptions(mesh=object()).resolve_backend() == "bsp"
+    assert SAOptions(backend="seq", mesh=object()).resolve_backend() == "seq"
+
+
+def test_options_roundtrip_and_validation():
+    opts = SAOptions(backend="seq", v0=7, schedule="fixed", base_threshold=64)
+    opts2 = opts.replace(backend="jax")
+    assert opts2.backend == "jax" and opts2.v0 == 7   # others preserved
+    assert opts.backend == "seq"                      # frozen original
+    with pytest.raises(ValueError):
+        SAOptions(schedule="warp")
+    with pytest.raises(ValueError):
+        SAOptions(v0=2)
+    assert callable(opts.schedule_fn)
+    custom = SAOptions(schedule=lambda v, d, m: 3)
+    assert custom.schedule_fn(9, 3, 10) == 3
+
+
+def test_saconfig_produces_options():
+    from repro.configs.suffix_array import SAConfig
+    cfg = SAConfig(backend="seq", v0=5, schedule="fixed", base_threshold=99)
+    opts = cfg.to_options()
+    assert isinstance(opts, SAOptions)
+    assert (opts.backend, opts.v0, opts.schedule, opts.base_threshold) == \
+        ("seq", 5, "fixed", 99)
+    mesh = object()
+    assert cfg.to_options(mesh=mesh).mesh is mesh
+    from repro.configs import get_config
+    assert get_config("suffix_array").to_options().resolve_backend() == "jax"
+
+
+def test_build_rejects_bad_input():
+    with pytest.raises(ValueError):
+        build_suffix_array(np.asarray([[0, 1], [1, 0]]))
+    with pytest.raises(ValueError):
+        build_suffix_array(np.asarray([1, -2, 3]))
+    with pytest.raises(TypeError):
+        build_suffix_array(np.asarray([0.5, 1.5]))
+    with pytest.raises(KeyError):
+        build_suffix_array(np.asarray([1, 0]), backend="nope")
+
+
+def test_register_backend():
+    def fake(x, options):
+        return np.arange(len(x))[::-1]
+    register_backend("reversed-fake", fake)
+    try:
+        assert "reversed-fake" in registered_backends()
+        assert get_backend("reversed-fake") is fake
+        with pytest.raises(ValueError):
+            register_backend("reversed-fake", fake)
+        got = build_suffix_array(np.asarray([3, 2, 1]),
+                                 backend="reversed-fake")
+        assert got.tolist() == [2, 1, 0]
+    finally:
+        from repro.api import registry
+        registry._REGISTRY.pop("reversed-fake", None)
+
+
+# ------------------------------------------------------------------ index
+def test_count_locate_match_naive():
+    rng = np.random.default_rng(11)
+    x = rng.integers(0, 4, size=400)
+    idx = SuffixArrayIndex.build(x)
+    for m in (1, 2, 3, 5, 9):
+        for _ in range(10):
+            pat = rng.integers(0, 4, size=m)
+            want = [i for i in range(len(x) - m + 1)
+                    if x[i:i + m].tolist() == pat.tolist()]
+            assert idx.count(pat) == len(want)
+            assert idx.locate(pat).tolist() == want
+    assert idx.count([]) == 0
+    assert idx.count(np.zeros(401, np.int64)) == 0   # longer than the text
+
+
+def test_multidoc_queries_respect_boundaries():
+    # "ab" + "ab": pattern "ba" must NOT match across the boundary
+    idx = SuffixArrayIndex.from_docs([[0, 1], [0, 1]])
+    assert idx.count([0, 1]) == 2
+    assert idx.count([1, 0]) == 0
+    assert idx.locate_docs([0, 1]).tolist() == [[0, 0], [1, 0]]
+    doc, off = idx.doc_offset(idx.locate([0, 1]))
+    assert np.asarray(doc).tolist() == [0, 1]
+    assert np.asarray(off).tolist() == [0, 0]
+
+
+def test_ngram_stats_excludes_separators():
+    idx = SuffixArrayIndex.from_docs([[0, 1, 0], [0, 1]])
+    st = idx.ngram_stats(2)
+    # windows: doc0 {01, 10}, doc1 {01} → total 3, distinct 2
+    assert (st.total, st.distinct) == (3, 2)
+    single = SuffixArrayIndex.build(np.asarray([0, 1, 0, 1, 0]))
+    st2 = single.ngram_stats(2)
+    assert (st2.total, st2.distinct) == (4, 2)
+    assert single.ngram_stats(0).total == 0
+
+
+def test_cross_doc_duplicates_vectorised():
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 50, 300)
+    b = rng.integers(0, 50, 300)
+    b[100:180] = a[50:130]                  # contaminate doc 1 with doc 0
+    idx = SuffixArrayIndex.from_docs([a, b])
+    hits = idx.cross_doc_duplicates(min_len=60)
+    assert any(l >= 80 for _, _, l in hits)
+    assert all(i == 0 and j == 1 for i, j, _ in hits)
+    assert idx.cross_doc_duplicates(min_len=10_000) == []
+
+
+def test_lcp_lazy_and_duplicate_spans():
+    x = np.asarray([0, 1, 2, 0, 1, 2, 0, 1, 2])
+    idx = SuffixArrayIndex.build(x)
+    assert idx._lcp is None                 # not built yet
+    spans = idx.duplicate_spans(min_len=3)
+    assert idx._lcp is not None             # built exactly when needed
+    covered = set()
+    for s, e in spans:
+        covered.update(range(s, e))
+    assert set(range(6)) <= covered         # positions 0..5 repeat
+
+
+# ------------------------------------------------------------------ shims
+def test_corpus_sa_shim_matches_facade():
+    from repro.text.corpus_sa import (build_corpus_sa, count_occurrences,
+                                      cross_doc_duplicates)
+    docs = [np.asarray([0, 1, 0, 2]), np.asarray([2, 0, 1])]
+    with pytest.deprecated_call():
+        csa = build_corpus_sa(docs)
+    idx = SuffixArrayIndex.from_docs(docs)
+    assert np.array_equal(csa.sa, idx.sa)
+    assert np.array_equal(csa.text, idx.text)
+    with pytest.deprecated_call():
+        assert count_occurrences(csa, [0, 1]) == idx.count([0, 1]) == 2
+    with pytest.deprecated_call():
+        assert cross_doc_duplicates(csa, 2) == idx.cross_doc_duplicates(2)
+    # doc_of now accepts arrays (and still scalars)
+    assert csa.doc_of(0) == 0
+    assert csa.doc_of(np.asarray([0, 5, 6])).tolist() == [0, 1, 1]
+    # legacy sa_builder= passthrough
+    with pytest.deprecated_call():
+        csa2 = build_corpus_sa(docs, sa_builder=_naive_sa)
+    assert np.array_equal(csa2.sa, idx.sa)
+
+
+def test_dedup_through_facade():
+    from repro.text.dedup import dedup_corpus, find_duplicates
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, 64, 800)
+    x[500:620] = x[100:220]
+    rep = find_duplicates(x, min_len=64, options=SAOptions(backend="jax"))
+    assert rep.dup_chars >= 120
+    out, rep2 = dedup_corpus(x, min_len=64)
+    assert len(out) < len(x)
+    with pytest.deprecated_call():          # legacy sa_builder kwarg
+        rep3 = find_duplicates(x, min_len=64, sa_builder=_naive_sa)
+    assert rep3.spans == rep.spans
+
+
+# ------------------------------------------------- distributed auto-select
+def test_mesh_auto_selects_bsp_subprocess():
+    """With a real 8-device mesh in the plan, `backend="auto"` must run the
+    BSP builder and agree with the oracle (the facade acceptance check)."""
+    code = textwrap.dedent("""
+    import jax, numpy as np
+    from repro.api import SAOptions, build_suffix_array
+    from repro.bsp.counters import BSPCounters
+    from repro.launch.mesh import make_sa_mesh
+    mesh = make_sa_mesh(8)
+    ct = BSPCounters()
+    opts = SAOptions(mesh=mesh, base_threshold=64, counters=ct)
+    assert opts.resolve_backend() == "bsp"
+    rng = np.random.default_rng(5)
+    x = rng.integers(0, 3, size=1200)
+    got = build_suffix_array(x, opts)
+    want = build_suffix_array(x, backend="oracle")
+    assert np.array_equal(got, want)
+    assert ct.supersteps > 0      # proof the BSP path actually ran
+    print("AUTO_BSP_OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=420, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "AUTO_BSP_OK" in r.stdout

@@ -55,6 +55,7 @@ def test_exchange_adversarial_skew():
     import jax, jax.numpy as jnp, numpy as np, functools
     from jax.sharding import Mesh, PartitionSpec as P
     from repro.bsp.exchange import exchange
+    from repro.core.compat import shard_map
     mesh = Mesh(np.array(jax.devices()).reshape(8), ("bsp",))
     p, m = 8, 32
     rng = np.random.default_rng(1)
@@ -66,7 +67,7 @@ def test_exchange_adversarial_skew():
         out, valid, over = exchange(r, d[:, 0], jnp.ones(m, bool), p=p,
                                     cap_out=p * m, axis="bsp")
         return out, valid[:, None], over[None]
-    fn = jax.jit(jax.shard_map(f, mesh=mesh,
+    fn = jax.jit(shard_map(f, mesh=mesh,
         in_specs=(P("bsp"), P("bsp")), out_specs=(P("bsp"), P("bsp"), P("bsp"))))
     out, valid, over = fn(jnp.asarray(rows), jnp.asarray(dest[:, None]))
     assert not bool(np.asarray(over).any())
