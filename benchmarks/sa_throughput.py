@@ -3,6 +3,14 @@
 plus a machine-readable `BENCH_sa_throughput.json` artifact so the perf
 trajectory is recorded run over run.
 
+Since the jax backend's sort primitive became pluggable
+(`SAOptions.sort_impl`), the shipping configuration is benchmarked as
+backend "jax" (sort_impl="auto") and the non-default implementations are
+recorded as explicit variant rows ("jax[lax]", "jax[bitonic]") so
+regressions of any path stay visible in the trajectory — the legacy fused
+bitonic network is capped at small n (it is O(n log² n) compare-exchanges
+by design). Every record carries its `sort_impl`.
+
     PYTHONPATH=src python -m benchmarks.sa_throughput [--out PATH]
 """
 import argparse
@@ -18,12 +26,21 @@ from .bench_util import emit, time_call
 
 SIZES = (10_000, 50_000, 200_000)
 #: per-backend n ceiling: the references are executable specs, not fast paths
-MAX_N = {"oracle": 50_000, "seq": 50_000}
+MAX_N = {"seq": 50_000}
+#: non-default jax sort_impl variants: impl → n ceiling
+JAX_VARIANTS = {"lax": 50_000, "bitonic": 10_000}
 
 
-def bench_backend(backend: str, x: np.ndarray) -> float:
-    opts = SAOptions(backend=backend)
+def bench_config(backend: str, x: np.ndarray, sort_impl: str = "auto") -> float:
+    opts = SAOptions(backend=backend, sort_impl=sort_impl)
     return time_call(lambda: build_suffix_array(x, opts), iters=2)
+
+
+def record(records, label, n, us, sort_impl="auto"):
+    mchars = n / us
+    emit(f"sa_throughput/{label}/n={n}", us, f"Mchars_s={mchars:.2f}")
+    records.append({"backend": label, "sort_impl": sort_impl, "n": n,
+                    "us": round(us, 1), "mchars_per_s": round(mchars, 3)})
 
 
 def main(argv=None):
@@ -42,12 +59,13 @@ def main(argv=None):
                 continue       # needs a multi-device mesh; see supersteps.py
             if n > MAX_N.get(backend, n):
                 continue
-            us = bench_backend(backend, x)
-            mchars = n / us
-            emit(f"sa_throughput/{backend}/n={n}", us,
-                 f"Mchars_s={mchars:.2f}")
-            records.append({"backend": backend, "n": n, "us": round(us, 1),
-                            "mchars_per_s": round(mchars, 3)})
+            us = bench_config(backend, x)
+            record(records, backend, n, us)
+        for impl, cap in JAX_VARIANTS.items():
+            if n > cap:
+                continue
+            us = bench_config("jax", x, sort_impl=impl)
+            record(records, f"jax[{impl}]", n, us, sort_impl=impl)
 
     if args.out:
         artifact = {

@@ -34,6 +34,14 @@ Three layers
    return identical results (np.int32[n]); the equivalence suite in
    `tests/api/test_api.py` enforces agreement with the oracle.
 
+   The jax backend's sort primitive is itself pluggable
+   (``SAOptions.sort_impl``: "auto"/"radix"/"lax"/"bitonic"/"pallas" — see
+   docs/architecture.md for the decision tree), and plans with
+   ``cache=True`` (default) go through the compiled-builder cache in
+   `build`: input lengths are padded to a geometric bucket grid so
+   repeated builds of nearby lengths reuse every jitted computation
+   (`builder_cache_stats` / `clear_builder_cache` expose it).
+
 3. **Index** (`SuffixArrayIndex`): text + SA + lazily-computed LCP with
    queries — `count` / `locate` (vectorised binary search),
    `ngram_stats(k)`, `duplicate_spans(min_len)`,
@@ -52,19 +60,23 @@ Quickstart
 >>> idx.count([0, 1]), idx.count([1, 0])
 (2, 2)
 """
-from .build import build_suffix_array
+from .build import (build_suffix_array, builder_cache_stats,
+                    clear_builder_cache)
 from .index import NgramStats, SuffixArrayIndex, encode_docs
-from .options import SAOptions, SCHEDULES
+from .options import SAOptions, SCHEDULES, SORT_IMPLS
 from .registry import (SuffixArrayBuilder, get_backend, register_backend,
                        registered_backends)
 
 __all__ = [
     "SAOptions",
     "SCHEDULES",
+    "SORT_IMPLS",
     "SuffixArrayBuilder",
     "SuffixArrayIndex",
     "NgramStats",
     "build_suffix_array",
+    "builder_cache_stats",
+    "clear_builder_cache",
     "encode_docs",
     "get_backend",
     "register_backend",

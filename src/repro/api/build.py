@@ -4,13 +4,94 @@ Validation, dtype normalisation, and trivial-input fast paths live here so
 every backend sees the same contract (int64 1-D text, values ≥ 0, n ≥ 2) and
 every caller gets the same result type (np.int32[n], a permutation of
 range(n)).
+
+This module also owns the **builder cache**, the keying/observability layer
+over the compiled state a build reuses. Suffix-array builds are dominated
+by per-shape compiled state (jitted XLA computations, packed
+difference-cover tables, device-resident Λ lookup tables), and a serving
+process sees an open-ended stream of input lengths. What prevents
+unbounded re-tracing is *shape quantisation*: plans with
+``options.cache=True`` run the jax backend with bucketed padding
+(`repro.core.dcv_jax.pad_bucket`, geometric grid of ratio ≤ 1.25), so all
+lengths inside one bucket reach the same shapes and jax's jit cache plus
+the lru-cached level tables in `dcv_jax` serve every later build without
+tracing (`TRACE_COUNTS` stays flat — `tests/api/test_sort_impl.py`
+asserts it; note recursion depth is data-dependent via the `distinct`
+short-circuit, so the first build of *new data* may still trace deeper
+levels).
+
+The cache here names each compiled configuration — one entry per
+``(resolved plan, bucketed length)``, where "resolved" means backend and
+sort_impl are concrete (``"auto"`` and its platform resolution share an
+entry) — and memoises that resolution. Its hit/miss counters are the
+serving-path metric for "did this build land on a warm configuration".
+`builder_cache_stats()` / `clear_builder_cache()` expose it to tests,
+benchmarks, and `repro.launch.serve`.
 """
 from __future__ import annotations
+
+from typing import Callable
 
 import numpy as np
 
 from .options import SAOptions
 from .registry import get_backend
+
+#: (backend, v0, schedule, base_threshold, resolved sort_impl, n_bucket)
+#: → (builder fn, resolved sort_impl).
+_BUILDER_CACHE: dict[tuple, tuple[Callable, str]] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def builder_cache_stats() -> dict:
+    """Snapshot of the builder cache: entries / hits / misses."""
+    return {"entries": len(_BUILDER_CACHE), **_CACHE_STATS}
+
+
+def clear_builder_cache() -> None:
+    """Drop all builder-cache entries and reset the hit/miss counters.
+
+    Does not drop jax's own jit cache — entries re-created after a clear
+    still reuse compiled computations when shapes match.
+    """
+    _BUILDER_CACHE.clear()
+    _CACHE_STATS["hits"] = 0
+    _CACHE_STATS["misses"] = 0
+
+
+def _resolved_impl(opts: SAOptions, backend: str) -> str:
+    """Concrete sort_impl for this plan ("auto" → the platform choice)."""
+    if backend != "jax" or opts.sort_impl != "auto":
+        return opts.sort_impl
+    from ..core.compat import default_sort_impl
+    return default_sort_impl()
+
+
+def _cached_builder(opts: SAOptions, n: int) -> tuple[Callable, SAOptions]:
+    """(builder, fully-resolved plan) for this plan + bucketed length.
+
+    The key uses the *resolved* backend and sort_impl, so plans that differ
+    only in spelling ("auto" vs its resolution) share one entry, and the
+    resolution work itself is memoised.
+    """
+    from ..core.dcv_jax import pad_bucket
+    backend = opts.resolve_backend()
+    impl = _resolved_impl(opts, backend)
+    sched = (opts.schedule if isinstance(opts.schedule, str)
+             else id(opts.schedule))
+    key = (backend, opts.v0, sched, opts.base_threshold, impl,
+           pad_bucket(n))
+    entry = _BUILDER_CACHE.get(key)
+    if entry is None:
+        _CACHE_STATS["misses"] += 1
+        entry = (get_backend(backend), impl)
+        _BUILDER_CACHE[key] = entry
+    else:
+        _CACHE_STATS["hits"] += 1
+    builder, impl = entry
+    if impl != opts.sort_impl:
+        opts = opts.replace(sort_impl=impl)
+    return builder, opts
 
 
 def build_suffix_array(x, options: SAOptions | None = None,
@@ -21,6 +102,13 @@ def build_suffix_array(x, options: SAOptions | None = None,
     Keyword overrides are applied on top of `options`, e.g.
     ``build_suffix_array(x, backend="seq")`` or
     ``build_suffix_array(x, opts, mesh=my_mesh)``.
+
+    With ``options.cache`` (the default) the build goes through the
+    compiled-builder cache: input lengths are padded up to a geometric
+    bucket grid inside the jax backend, so repeated builds of nearby
+    lengths — `SuffixArrayIndex` rebuilds, the serve path, benchmark
+    sweeps — reuse every jitted computation instead of re-tracing. Pass
+    ``cache=False`` to build at the exact input shape.
     """
     opts = options if options is not None else SAOptions()
     if overrides:
@@ -41,7 +129,11 @@ def build_suffix_array(x, options: SAOptions | None = None,
     if n == 1:
         return np.zeros(1, dtype=np.int32)
 
-    sa = np.asarray(get_backend(opts.resolve_backend())(x, opts))
+    if opts.cache:
+        builder, opts = _cached_builder(opts, n)
+    else:
+        builder = get_backend(opts.resolve_backend())
+    sa = np.asarray(builder(x, opts))
     sa = sa.astype(np.int32, copy=False)
     if opts.validate and sa.shape != (n,):
         raise RuntimeError(

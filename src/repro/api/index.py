@@ -92,7 +92,11 @@ class SuffixArrayIndex:
     @classmethod
     def build(cls, text, options: SAOptions | None = None,
               **overrides) -> "SuffixArrayIndex":
-        """Index a single document (no separators, positions = raw offsets)."""
+        """Index a single document (no separators, positions = raw offsets).
+
+        Construction goes through `build_suffix_array`, so it benefits from
+        the compiled-builder cache: indexing many similar-length documents
+        under one plan reuses all jitted computations (see docs/api.md)."""
         opts = options if options is not None else SAOptions()
         if overrides:
             opts = opts.replace(**overrides)

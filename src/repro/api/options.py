@@ -3,9 +3,11 @@
 Every knob that used to be scattered across `suffix_array_dcv` /
 `suffix_array_jax` / `suffix_array_bsp` call sites (initial modulus `v0`,
 the v-schedule, recursion base threshold, the BSP mesh/axis, key packing,
-instrumentation sinks) lives here. Consumers construct one `SAOptions` and
-hand it to `repro.api.build_suffix_array`; backends read only the fields
-they understand.
+the sort-primitive implementation, instrumentation sinks) lives here.
+Consumers construct one `SAOptions` and hand it to
+`repro.api.build_suffix_array`; backends read only the fields they
+understand. The dataclass is frozen, so the builder cache in
+`repro.api.build` can key compiled configurations by its fields.
 """
 from __future__ import annotations
 
@@ -24,6 +26,10 @@ SCHEDULES: dict[str, Callable[[int, int, int], int]] = {
 
 AUTO = "auto"
 
+#: accepted `sort_impl` values; mirrors `repro.core.dcv_jax.SORT_IMPLS`.
+#: Kept as a literal here so constructing an SAOptions never imports jax.
+SORT_IMPLS = ("auto", "radix", "lax", "bitonic", "pallas")
+
 
 @dataclass(frozen=True)
 class SAOptions:
@@ -39,7 +45,20 @@ class SAOptions:
                     ``"fixed"`` (constant v baseline), or a callable
                     ``(v, |D|, m) -> v'``.
     base_threshold: recursion cutoff; ``None`` keeps each backend's native
-                    default (seq: 32, jax: 256, bsp: max(1024, n/p)).
+                    default (seq: 32, jax: per sort_impl, bsp:
+                    max(1024, n/p)).
+    sort_impl:      which sort primitive the jax backend's hot path uses:
+                    ``"auto"`` resolves per platform via
+                    `repro.core.compat.default_sort_impl` ("radix" on CPU
+                    hosts, "lax" on TPU/GPU); ``"radix"`` packed-key host
+                    sorts; ``"lax"`` XLA's variadic `lax.sort`;
+                    ``"bitonic"`` the legacy fused comparator network;
+                    ``"pallas"`` the Mosaic row-sort kernels. See
+                    docs/architecture.md for the decision tree.
+    cache:          enable the compiled-builder cache and bucketed shape
+                    padding in `repro.api.build` — repeated builds of
+                    nearby lengths reuse jitted computations instead of
+                    re-tracing. Disable for exact-shape benchmarking.
     mesh:           a 1-D ``jax.sharding.Mesh`` for the BSP backend. Setting
                     it makes ``backend="auto"`` resolve to ``"bsp"``.
     axis:           mesh axis name the BSP pipeline shards over.
@@ -53,6 +72,8 @@ class SAOptions:
     v0: int = 3
     schedule: Union[str, Callable[[int, int, int], int]] = "accelerated"
     base_threshold: int | None = None
+    sort_impl: str = AUTO
+    cache: bool = True
     mesh: Any = None
     axis: str = "bsp"
     pack_keys: bool = True
@@ -67,6 +88,9 @@ class SAOptions:
                 f"expected one of {sorted(SCHEDULES)} or a callable")
         if self.v0 < 3:
             raise ValueError(f"v0 must be ≥ 3 (difference covers), got {self.v0}")
+        if self.sort_impl not in SORT_IMPLS:
+            raise ValueError(f"unknown sort_impl {self.sort_impl!r}; "
+                             f"expected one of {SORT_IMPLS}")
 
     @property
     def schedule_fn(self) -> Callable[[int, int, int], int]:

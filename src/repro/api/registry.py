@@ -13,8 +13,12 @@ Built-ins registered on import:
             ground truth the equivalence suite compares everything against.
 ``seq``     paper-faithful sequential DC-v, Algorithm 1
             (`repro.core.seq_ref.suffix_array_dcv`).
-``jax``     vectorised single-device DC-v on XLA
-            (`repro.core.dcv_jax.suffix_array_jax`).
+``jax``     vectorised single-device DC-v
+            (`repro.core.dcv_jax.suffix_array_jax`) — the fastest
+            single-device path. Honours ``options.sort_impl`` (platform-
+            adaptive sort primitive, see docs/architecture.md) and
+            ``options.cache`` (bucketed shape padding for the compiled-
+            builder cache in `repro.api.build`).
 ``bsp``     Algorithm 3 on a 1-D shard_map mesh
             (`repro.bsp.suffix_array.suffix_array_bsp`); builds a mesh over
             all local devices when `options.mesh` is None.
@@ -90,7 +94,8 @@ def _seq_backend(x: np.ndarray, options: SAOptions) -> np.ndarray:
 
 def _jax_backend(x: np.ndarray, options: SAOptions) -> np.ndarray:
     from ..core.dcv_jax import suffix_array_jax
-    kw = {"v": options.v0, "schedule": options.schedule_fn}
+    kw = {"v": options.v0, "schedule": options.schedule_fn,
+          "sort_impl": options.sort_impl, "bucket": options.cache}
     if options.base_threshold is not None:
         kw["base_threshold"] = options.base_threshold
     return suffix_array_jax(x, **kw)

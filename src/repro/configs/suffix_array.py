@@ -15,6 +15,8 @@ class SAConfig:
     v0: int = 3
     schedule: str = "accelerated"   # or "fixed"
     base_threshold: int = 4096
+    sort_impl: str = "auto"     # jax-backend sort primitive (see SAOptions)
+    cache: bool = True          # compiled-builder cache + bucketed padding
     pack_keys: bool = True
     axis: str = "bsp"
 
@@ -26,6 +28,7 @@ class SAConfig:
         return SAOptions(backend=self.backend, v0=self.v0,
                          schedule=self.schedule,
                          base_threshold=self.base_threshold,
+                         sort_impl=self.sort_impl, cache=self.cache,
                          mesh=mesh, axis=self.axis,
                          pack_keys=self.pack_keys,
                          counters=counters, stats=stats)

@@ -1,11 +1,24 @@
-"""Version compatibility shims for the host jax.
+"""Version and platform compatibility shims for the host jax.
 
-`jax.shard_map` was promoted out of `jax.experimental.shard_map` only in
-newer jax releases; the baked-in toolchain may predate that. Import
-`shard_map` from here instead of from jax directly so both layouts work.
-`check_rep` is disabled on the experimental fallback: the BSP layer's
-collective patterns (ppermute halos + capacity-bounded all-to-all) are not
-expressible under its replication checker.
+Two concerns live here:
+
+1. **API layout.** `jax.shard_map` was promoted out of
+   `jax.experimental.shard_map` only in newer jax releases; the baked-in
+   toolchain may predate that. Import `shard_map` from here instead of from
+   jax directly so both layouts work. `check_rep` is disabled on the
+   experimental fallback: the BSP layer's collective patterns (ppermute
+   halos + capacity-bounded all-to-all) are not expressible under its
+   replication checker.
+
+2. **Primitive selection.** The suffix-array hot path is sort-bound, and
+   the best sort primitive differs per platform: XLA's `lax.sort` is a
+   single-threaded comparison sort on CPU (~50× slower than the host
+   radix/introsort at n=200k on this container) but is the native fast path
+   on TPU/GPU, and the Mosaic Pallas kernels in `repro.kernels` only
+   compile on TPU (elsewhere they run in the slow `interpret=True` mode).
+   `default_sort_impl()` / `pallas_available()` encode that decision tree
+   once so `repro.core.dcv_jax` and the `repro.api` registry never
+   hard-code a platform assumption (see docs/architecture.md).
 """
 from __future__ import annotations
 
@@ -27,3 +40,40 @@ else:  # pragma: no cover - exercised only on older jax
                                      **kw)
         return _shard_map_experimental(f, mesh=mesh, in_specs=in_specs,
                                        out_specs=out_specs, **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def backend_platform() -> str:
+    """The default jax backend platform: "cpu", "tpu", or "gpu"."""
+    try:
+        return jax.default_backend()
+    except Exception:  # pragma: no cover - jax failed to init a backend
+        return "cpu"
+
+
+def pallas_available() -> bool:
+    """True when the Pallas kernels in `repro.kernels` can run *compiled*
+    (Mosaic on TPU). Elsewhere they only run under `interpret=True`, which
+    executes kernel bodies in Python and is strictly slower than the lax /
+    host fallbacks — callers should treat that as "unavailable" for
+    performance selection (it stays usable for correctness testing).
+    """
+    return backend_platform() == "tpu"
+
+
+def default_sort_impl() -> str:
+    """Resolve `sort_impl="auto"` for the current platform.
+
+    ==========  ==========================================================
+    "radix"     CPU — packed-key host sorts (numpy introsort / LSD radix
+                passes); XLA's CPU `lax.sort` is a single-threaded
+                comparison sort and loses by ~50× at n=200k.
+    "lax"       TPU/GPU — XLA's native variadic `lax.sort`, one fused
+                multi-key sort per round, no host round-trips.
+    ==========  ==========================================================
+
+    The Pallas row-sort path is *not* auto-selected yet even on TPU (the
+    fused `lax.sort` is at least as good for these payload widths); request
+    it explicitly with ``sort_impl="pallas"``.
+    """
+    return "lax" if backend_platform() in ("tpu", "gpu") else "radix"

@@ -1,7 +1,21 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""jit'd public wrappers for the Pallas (Mosaic TPU) kernels.
 
-`interpret=True` executes kernel bodies in Python on CPU (the validation
-mode for this container); on TPU pass interpret=False for compiled Mosaic.
+These are the compiled counterparts of the sort/rank primitives the
+suffix-array hot path is built from (see docs/architecture.md):
+
+* `radix_histogram`   — per-block histograms + reduction (radix passes);
+* `dense_rank_sorted` — dense ranks of lexicographically sorted rows, the
+  step after every sort in the paper's Steps 1 & 3
+  (`repro.core.dcv_jax` routes its sample ranking through this when
+  ``sort_impl="pallas"``);
+* `bitonic_stage` / `bitonic_sort` — one compare-exchange stage / a full
+  row sort of the fused Lemma-1 payload.
+
+`interpret=True` executes kernel bodies in Python on CPU — the validation
+mode for this container, exercised by `tests/kernels` and the small-n
+cases of `tests/api/test_sort_impl.py`. On TPU pass ``interpret=False``
+for compiled Mosaic (`repro.core.compat.pallas_available` tells you which
+regime the current host is in).
 """
 from __future__ import annotations
 
@@ -18,7 +32,11 @@ from .seg_boundary import seg_boundary_pallas
 @functools.partial(jax.jit, static_argnames=("n_bins", "block", "interpret"))
 def radix_histogram(digits, n_bins: int, block: int = 1024,
                     interpret: bool = True):
-    """Global histogram: per-block MXU histograms + reduction."""
+    """Global histogram of `digits` (int32[N], values in [0, n_bins)).
+
+    Pads N up to a multiple of `block` (the pad digit gets a scratch bin
+    that is dropped), computes per-block MXU histograms in the kernel, and
+    reduces them. Returns int32[n_bins]."""
     n = digits.shape[0]
     pad = (-n) % block
     if pad:
@@ -36,6 +54,9 @@ def dense_rank_sorted(rows, num_keys: int | None = None, block: int = 512,
                       interpret: bool = True):
     """Dense ranks of lexicographically sorted rows [N, W]:
     kernel computes block-local boundaries/cumsums, wrapper stitches blocks.
+
+    Rows must already be sorted by their first `num_keys` columns (default:
+    all). Equal rows share a rank; ranks are dense (0..num_distinct-1).
 
     Returns (ranks int32[N], num_distinct int32[])."""
     n, W = rows.shape
@@ -71,11 +92,22 @@ def dense_rank_sorted(rows, num_keys: int | None = None, block: int = 512,
                                              "interpret"))
 def bitonic_stage(rows, k: int, j: int, num_keys: int | None = None,
                   tile: int = 256, interpret: bool = True):
+    """One bitonic compare-exchange stage (k, j) over rows int32[N, W].
+
+    N must be a power of two; rows are compared lexicographically on their
+    first `num_keys` columns (default: all). Element i exchanges with i^j,
+    ascending iff (i & k) == 0 — `repro.core.bitonic._stage_schedule`
+    enumerates the (k, j) pairs of a full sort."""
     return bitonic_stage_pallas(rows, k, j, tile=tile, num_keys=num_keys,
                                 interpret=interpret)
 
 
 def bitonic_sort(rows, num_keys: int | None = None, tile: int = 256,
                  interpret: bool = True):
+    """Full bitonic row sort: all (k, j) stages of `bitonic_stage` in
+    sequence. rows int32[N, W] with N a power of two; sorts ascending by
+    the first `num_keys` columns (append a unique index column to make the
+    order total — `repro.core.dcv_jax` does exactly that for its
+    ``sort_impl="pallas"`` window sort)."""
     return bitonic_sort_pallas(rows, num_keys=num_keys, tile=tile,
                                interpret=interpret)

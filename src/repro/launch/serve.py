@@ -59,7 +59,7 @@ def serve_sa_queries(cfg, *, n_chars: int, n_docs: int, n_queries: int,
     queries against it. Backend selection is the facade's auto rule: a 1-D
     mesh over all devices when p > 1 (the paper's Algorithm 3), else the
     vectorised single-device DC-v."""
-    from ..api import SuffixArrayIndex
+    from ..api import SuffixArrayIndex, builder_cache_stats
     from .mesh import make_sa_mesh
 
     mesh = make_sa_mesh() if len(jax.devices()) > 1 else None
@@ -72,7 +72,8 @@ def serve_sa_queries(cfg, *, n_chars: int, n_docs: int, n_queries: int,
     index = SuffixArrayIndex.from_docs(docs, opts)
     build_s = time.time() - t0
     print(f"indexed {index.n} chars / {index.n_docs} docs in {build_s:.2f}s "
-          f"(backend={opts.resolve_backend()})")
+          f"(backend={opts.resolve_backend()}, "
+          f"builder_cache={builder_cache_stats()})")
 
     # half the queries are planted substrings (must hit), half random
     hits = 0

@@ -1,0 +1,152 @@
+"""Equivalence + caching tests for the jax backend's pluggable sort path.
+
+Two families:
+
+* every `sort_impl` choice must reproduce the oracle suffix array on
+  random and degenerate inputs (all-equal characters, tiny n, lengths
+  exactly at / just past a pad-bucket boundary), with and without bucketed
+  padding;
+* the compiled-builder cache must actually prevent re-tracing: a second
+  build of the same bucketed shape adds zero jax trace events and counts
+  as a cache hit.
+"""
+import numpy as np
+import pytest
+
+from repro.api import (SAOptions, build_suffix_array, builder_cache_stats,
+                       clear_builder_cache)
+from repro.core import dcv_jax
+from repro.core.dcv_jax import pad_bucket, resolve_sort_impl, suffix_array_jax
+
+RNG = np.random.default_rng(20260731)
+
+#: name → text. Degenerate shapes on purpose; see ISSUE 2 satellite 5.
+TEXTS = {
+    "rand256": RNG.integers(0, 256, 900),
+    "rand4": RNG.integers(0, 4, 700),
+    "binary": RNG.integers(0, 2, 500),
+    "all_equal": np.full(400, 7),
+    "periodic": np.tile([2, 1, 3], 150),
+    "tiny2": np.array([1, 0]),
+    "tiny3": np.array([2, 2, 2]),
+    "tiny5": np.array([4, 1, 4, 1, 0]),
+    "bucket_exact": RNG.integers(0, 16, pad_bucket(700)),      # == a bucket
+    "bucket_plus1": RNG.integers(0, 16, pad_bucket(700) + 1),  # spills over
+}
+
+# "pallas" runs interpret=True on CPU (Python-speed) — keep its n small.
+_PALLAS_MAX_N = 256
+
+
+def _oracle(x):
+    return build_suffix_array(x, backend="oracle")
+
+
+@pytest.mark.parametrize("impl", ["auto", "radix", "lax", "bitonic", "pallas"])
+@pytest.mark.parametrize("name", sorted(TEXTS))
+@pytest.mark.parametrize("bucket", [False, True])
+def test_sort_impl_matches_oracle(impl, name, bucket):
+    x = TEXTS[name]
+    if impl == "pallas" and len(x) > _PALLAS_MAX_N:
+        x = x[:_PALLAS_MAX_N]
+    got = suffix_array_jax(x, base_threshold=16, sort_impl=impl,
+                           bucket=bucket)
+    assert np.array_equal(got, _oracle(x)), (impl, name, bucket)
+
+
+@pytest.mark.parametrize("impl", ["radix", "lax"])
+def test_sort_impl_through_facade(impl):
+    x = TEXTS["rand256"]
+    got = build_suffix_array(x, backend="jax", sort_impl=impl)
+    assert np.array_equal(got, _oracle(x))
+
+
+def test_unknown_sort_impl_rejected():
+    with pytest.raises(ValueError, match="sort_impl"):
+        SAOptions(sort_impl="quantum")
+    with pytest.raises(ValueError, match="sort_impl"):
+        suffix_array_jax(TEXTS["tiny3"], sort_impl="quantum")
+
+
+def test_auto_resolves_to_platform_choice():
+    assert resolve_sort_impl("auto") in ("radix", "lax")
+    assert resolve_sort_impl("bitonic") == "bitonic"
+
+
+def test_pad_bucket_grid():
+    # grid points map to themselves; ratio between neighbours ≤ 1.25
+    for n in (512, 1024, 1280, 1536, 1792, 2048, 200_000):
+        assert pad_bucket(pad_bucket(n)) == pad_bucket(n) >= n
+    assert pad_bucket(1025) == 1280
+    assert pad_bucket(1281) == 1536
+    # below the bucketing floor lengths stay exact
+    assert pad_bucket(17) == 17
+
+
+# ---------------------------------------------------------------------------
+# compiled-builder cache
+# ---------------------------------------------------------------------------
+def test_no_retrace_on_same_shape_rebuild():
+    """Second build of the same bucketed shape: no new jax traces."""
+    rng = np.random.default_rng(7)
+    opts = SAOptions(backend="jax")
+    build_suffix_array(rng.integers(0, 256, 3000), opts)   # cold shapes
+    before = dcv_jax.trace_events()
+    build_suffix_array(rng.integers(0, 256, 3000), opts)
+    assert dcv_jax.trace_events() == before
+
+
+def test_no_retrace_on_same_shape_rebuild_lax():
+    """Same, for the jitted lax sort path (exercises jax's trace cache).
+
+    Identical text both times: the recursion's `distinct` short-circuit is
+    data-dependent, so only same-content rebuilds have provably identical
+    level shapes."""
+    x = np.random.default_rng(8).integers(0, 256, 2000)
+    opts = SAOptions(backend="jax", sort_impl="lax")
+    build_suffix_array(x, opts)
+    before = dcv_jax.trace_events()
+    build_suffix_array(x.copy(), opts)
+    assert dcv_jax.trace_events() == before
+
+
+def test_no_retrace_within_bucket():
+    """A different length in the same bucket reuses every compiled shape."""
+    rng = np.random.default_rng(9)
+    opts = SAOptions(backend="jax")
+    n = 3000
+    n2 = pad_bucket(n)                                # same bucket by constr.
+    assert pad_bucket(n2) == n2 and n2 != n
+    build_suffix_array(rng.integers(0, 256, n), opts)
+    before = dcv_jax.trace_events()
+    build_suffix_array(rng.integers(0, 256, n2), opts)
+    assert dcv_jax.trace_events() == before
+
+
+def test_builder_cache_hits_and_misses():
+    clear_builder_cache()
+    opts = SAOptions(backend="jax")
+    x = np.random.default_rng(10).integers(0, 256, 2000)
+    build_suffix_array(x, opts)
+    s1 = builder_cache_stats()
+    assert s1["misses"] >= 1 and s1["entries"] >= 1
+    build_suffix_array(x, opts)
+    s2 = builder_cache_stats()
+    assert s2["hits"] == s1["hits"] + 1
+    assert s2["entries"] == s1["entries"]             # same bucket, no growth
+    # "auto" is resolved before keying: spelling out the platform choice
+    # names the same compiled configuration, not a new one
+    build_suffix_array(x, opts.replace(sort_impl=resolve_sort_impl("auto")))
+    s3 = builder_cache_stats()
+    assert s3["entries"] == s2["entries"]
+    assert s3["hits"] == s2["hits"] + 1
+    # a genuinely different plan is a different compiled configuration
+    build_suffix_array(x, opts.replace(sort_impl="bitonic"))
+    assert builder_cache_stats()["entries"] == s3["entries"] + 1
+
+
+def test_cache_disabled_bypasses_builder_cache():
+    clear_builder_cache()
+    x = np.random.default_rng(11).integers(0, 256, 2000)
+    build_suffix_array(x, SAOptions(backend="jax", cache=False))
+    assert builder_cache_stats() == {"entries": 0, "hits": 0, "misses": 0}

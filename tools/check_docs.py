@@ -1,0 +1,135 @@
+#!/usr/bin/env python
+"""Executable-docs checker: run every python code block in README.md and
+docs/*.md, and fail on broken cross-references to repo modules.
+
+Two passes over each markdown file:
+
+1. **Code blocks.** Every fenced ```python block is executed in its own
+   namespace (doctest-style: blocks must be self-contained, and they are
+   written that way on purpose — CI guarantees the docs never rot).
+   Fenced ```bash blocks are NOT executed, but any `python -m <module>`
+   they mention must at least be importable.
+2. **Cross-references.** Every `repro.*` dotted path in backtick code
+   spans must resolve to an importable module / attribute, every
+   `src/...`, `docs/...`, `tests/...`, `benchmarks/...`, `examples/...`
+   path mentioned must exist on disk, and every relative markdown link
+   must point at an existing file.
+
+Usage:  PYTHONPATH=src python tools/check_docs.py [files...]
+Exit status 0 = all good, 1 = at least one failure (listed on stderr).
+"""
+from __future__ import annotations
+
+import importlib
+import re
+import sys
+import traceback
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+# blocks and xrefs assume the repo layout: repo root (benchmarks/, tools/)
+# and src/ (repro) importable regardless of the caller's cwd.
+for _p in (str(REPO), str(REPO / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+#: dotted repro paths inside `backticks` (optionally with a call/member tail)
+XREF_RE = re.compile(r"`(repro(?:\.\w+)+)")
+#: repo-relative file paths inside backticks
+PATH_RE = re.compile(
+    r"`((?:src|docs|tests|benchmarks|examples|tools)/[\w./\-]+)`")
+#: relative markdown links [text](target) — skip URLs and anchors
+LINK_RE = re.compile(r"\]\((?!https?://|#)([^)#]+)(?:#[^)]*)?\)")
+#: `python -m <module>` invocations in bash blocks
+PYMOD_RE = re.compile(r"python\s+-m\s+([\w.]+)")
+
+
+def iter_blocks(text: str):
+    """Yield (language, first_line_number, source) for each fenced block."""
+    lang, buf, start = None, [], 0
+    for i, line in enumerate(text.splitlines(), 1):
+        m = FENCE_RE.match(line.strip())
+        if m and lang is None:
+            lang, buf, start = m.group(1) or "text", [], i + 1
+        elif line.strip() == "```" and lang is not None:
+            yield lang, start, "\n".join(buf)
+            lang = None
+        elif lang is not None:
+            buf.append(line)
+
+
+def resolve_xref(dotted: str) -> bool:
+    """True iff `dotted` names an importable module or module attribute."""
+    parts = dotted.split(".")
+    for cut in range(len(parts), 0, -1):
+        modname = ".".join(parts[:cut])
+        try:
+            obj = importlib.import_module(modname)
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return False
+        return True
+    return False
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    text = path.read_text()
+    rel = path.relative_to(REPO)
+
+    for lang, line, src in iter_blocks(text):
+        if lang == "python":
+            ns = {"__name__": f"docblock:{rel}:{line}"}
+            try:
+                exec(compile(src, f"{rel}:{line}", "exec"), ns)  # noqa: S102
+            except Exception:
+                tb = traceback.format_exc(limit=2)
+                errors.append(f"{rel}:{line}: python block failed:\n{tb}")
+        elif lang in ("bash", "sh", "shell"):
+            for mod in PYMOD_RE.findall(src):
+                try:
+                    found = importlib.util.find_spec(mod) is not None
+                except (ImportError, ModuleNotFoundError):
+                    found = False
+                if not found and not resolve_xref(mod):
+                    errors.append(f"{rel}:{line}: bash block references "
+                                  f"unimportable module {mod!r}")
+
+    # cross-references outside code blocks too (tables, prose)
+    for dotted in sorted(set(XREF_RE.findall(text))):
+        if not resolve_xref(dotted):
+            errors.append(f"{rel}: broken module reference `{dotted}`")
+    for p in sorted(set(PATH_RE.findall(text))):
+        target = REPO / p
+        if not target.exists() and not list(REPO.glob(p)):
+            errors.append(f"{rel}: broken path reference `{p}`")
+    for link in sorted(set(LINK_RE.findall(text))):
+        if not (path.parent / link).exists():
+            errors.append(f"{rel}: broken markdown link `{link}`")
+    return errors
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    files = ([Path(a) for a in args] if args else
+             [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))])
+    all_errors = []
+    for f in files:
+        errs = check_file(f)
+        blocks = sum(1 for lang, _, _ in iter_blocks(f.read_text())
+                     if lang == "python")
+        status = "FAIL" if errs else "ok"
+        print(f"[{status}] {f.relative_to(REPO)} ({blocks} python blocks)")
+        all_errors += errs
+    for e in all_errors:
+        print(e, file=sys.stderr)
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
