@@ -3,7 +3,10 @@
 Measured supersteps on a real 8-shard run + the analytic cost model for
 p up to 2^20, against the paper's O(log log p) and Kärkkäinen et al.'s
 O(log² p) baselines. The per-round superstep constant is the measured one
-(SM1=11, SM2=9, base=1)."""
+(SM1=11, SM2=9, base=1), which `tests/core/test_bsp.py` pins against
+`repro.bsp.suffix_array.estimate_costs` — the exact-replay model for
+realistic (n, p). The capped model below trades that exactness for
+feasibility at astronomic sizes (difference covers clamped at v=2048)."""
 import os
 import subprocess
 import sys

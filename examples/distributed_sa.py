@@ -26,8 +26,9 @@ def main():
     sa = build_suffix_array(x, opts)
 
     assert np.array_equal(sa, build_suffix_array(x, backend="oracle"))
-    print(f"p={p} n={len(x)}: SA correct (backend={opts.resolve_backend()}).")
-    print(f"BSP costs: S={ct.supersteps} supersteps, "
+    print(f"p={p} n={len(x)}: SA correct (backend={opts.resolve_backend()}, "
+          f"packed-key local sorts).")
+    print(f"BSP costs: S={ct.supersteps} supersteps over {ct.rounds} rounds, "
           f"H={ct.comm_words} words, W={ct.work} ops")
     print("per-superstep log (first 12):")
     for e in ct.log[:12]:

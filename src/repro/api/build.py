@@ -60,11 +60,21 @@ def clear_builder_cache() -> None:
 
 
 def _resolved_impl(opts: SAOptions, backend: str) -> str:
-    """Concrete sort_impl for this plan ("auto" → the platform choice)."""
-    if backend != "jax" or opts.sort_impl != "auto":
+    """Concrete sort_impl for this plan ("auto" → the backend's choice).
+
+    jax resolves per platform (`repro.core.compat.default_sort_impl`); bsp
+    per `repro.bsp.psort.resolve_bsp_sort_impl` — imported lazily so only
+    plans that actually target the bsp backend load the BSP stack (which
+    they are about to build with anyway)."""
+    if opts.sort_impl != "auto":
         return opts.sort_impl
-    from ..core.compat import default_sort_impl
-    return default_sort_impl()
+    if backend == "jax":
+        from ..core.compat import default_sort_impl
+        return default_sort_impl()
+    if backend == "bsp":
+        from ..bsp.psort import resolve_bsp_sort_impl
+        return resolve_bsp_sort_impl(opts.sort_impl, opts.pack_keys)
+    return opts.sort_impl
 
 
 def _cached_builder(opts: SAOptions, n: int) -> tuple[Callable, SAOptions]:

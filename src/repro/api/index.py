@@ -143,8 +143,18 @@ class SuffixArrayIndex:
         return np.flatnonzero(self.text < self.shift).astype(np.int64)
 
     def doc_of(self, pos):
-        """Document index owning encoded position(s) `pos` (scalar or array)."""
-        idx = np.searchsorted(self.doc_starts, pos, side="right") - 1
+        """Document index owning encoded position(s) `pos` (scalar or array).
+
+        Positions must lie in [0, n); out-of-range values raise IndexError
+        (they used to wrap around silently — on an empty index
+        `doc_offset(0)` crashed on `doc_starts[-1]`, on a non-empty one a
+        negative position was attributed to the last document). An empty
+        position *array* is always valid and maps to an empty result."""
+        pos_arr = np.asarray(pos)
+        if pos_arr.size and (np.any(pos_arr < 0) or np.any(pos_arr >= self.n)):
+            raise IndexError(
+                f"position(s) out of range for index of length {self.n}")
+        idx = np.searchsorted(self.doc_starts, pos_arr, side="right") - 1
         if np.isscalar(pos) or np.ndim(pos) == 0:
             return int(idx)
         return idx.astype(np.int64)
@@ -152,7 +162,7 @@ class SuffixArrayIndex:
     def doc_offset(self, pos):
         """(doc, in-document offset) for encoded position(s) `pos`."""
         doc = self.doc_of(pos)
-        return doc, pos - self.doc_starts[doc]
+        return doc, np.asarray(pos) - self.doc_starts[doc]
 
     # ------------------------------------------------------------- queries
     def _encode_pattern(self, pattern) -> np.ndarray:
@@ -167,6 +177,11 @@ class SuffixArrayIndex:
         One numpy gather + compare per call — no Python character loop."""
         starts = np.asarray(starts, np.int64).ravel()
         m, n = len(pat), self.n
+        if m == 0 or n == 0:
+            # empty pattern is a prefix of everything; on an empty index
+            # every probe is past-the-end, i.e. "suffix < pat". Guarded
+            # here so n-1 == -1 can never wrap the gather below.
+            return np.full(len(starts), -1 if (n == 0 and m) else 0, np.int8)
         idx = starts[:, None] + np.arange(m, dtype=np.int64)[None, :]
         in_range = idx < n
         seg = np.where(in_range, self.text[np.minimum(idx, n - 1)],

@@ -47,13 +47,20 @@ class SAOptions:
     base_threshold: recursion cutoff; ``None`` keeps each backend's native
                     default (seq: 32, jax: per sort_impl, bsp:
                     max(1024, n/p)).
-    sort_impl:      which sort primitive the jax backend's hot path uses:
-                    ``"auto"`` resolves per platform via
+    sort_impl:      which sort primitive the hot path uses. For the jax
+                    backend, ``"auto"`` resolves per platform via
                     `repro.core.compat.default_sort_impl` ("radix" on CPU
                     hosts, "lax" on TPU/GPU); ``"radix"`` packed-key host
                     sorts; ``"lax"`` XLA's variadic `lax.sort`;
                     ``"bitonic"`` the legacy fused comparator network;
-                    ``"pallas"`` the Mosaic row-sort kernels. See
+                    ``"pallas"`` the Mosaic row-sort kernels. For the bsp
+                    backend the same names select the *shard-local* sort
+                    inside both Algorithm-2 psorts: ``"auto"`` → packed-key
+                    ``"radix"`` (or ``"lax"`` when `pack_keys` is False),
+                    ``"lax"`` unpacked multi-key `lax.sort`, ``"bitonic"``
+                    the legacy comparator network kept as the benchmark
+                    regression row; ``"pallas"`` is rejected
+                    (`repro.bsp.psort.resolve_bsp_sort_impl`). See
                     docs/architecture.md for the decision tree.
     cache:          enable the compiled-builder cache and bucketed shape
                     padding in `repro.api.build` — repeated builds of
@@ -62,7 +69,11 @@ class SAOptions:
     mesh:           a 1-D ``jax.sharding.Mesh`` for the BSP backend. Setting
                     it makes ``backend="auto"`` resolve to ``"bsp"``.
     axis:           mesh axis name the BSP pipeline shards over.
-    pack_keys:      BSP radix key packing (§Perf SA-iteration A).
+    pack_keys:      BSP radix key packing (§Perf SA-iteration A). Only
+                    consulted when ``sort_impl="auto"`` (False → the
+                    unpacked "lax" local sort) or ``"bitonic"`` (legacy
+                    SM1 window packing); explicit "radix"/"lax" already
+                    state the packing choice.
     counters:       ``repro.bsp.counters.BSPCounters`` sink (BSP backend).
     stats:          ``repro.core.seq_ref.SeqStats`` sink (seq backend).
     validate:       check input values are non-negative ints before building.

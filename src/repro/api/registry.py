@@ -21,7 +21,12 @@ Built-ins registered on import:
             builder cache in `repro.api.build`).
 ``bsp``     Algorithm 3 on a 1-D shard_map mesh
             (`repro.bsp.suffix_array.suffix_array_bsp`); builds a mesh over
-            all local devices when `options.mesh` is None.
+            all local devices when `options.mesh` is None. Honours
+            ``options.sort_impl`` for the shard-local sorts inside both
+            Algorithm-2 psorts ("auto" → packed-key "radix"; "bitonic" is
+            the legacy comparator network; "pallas" is rejected — see
+            `repro.bsp.psort.resolve_bsp_sort_impl`) and
+            ``options.counters`` for BSP superstep accounting.
 ==========  ===============================================================
 
 `register_backend` exists so future substrates (Pallas kernels, multi-host)
@@ -112,7 +117,7 @@ def _bsp_backend(x: np.ndarray, options: SAOptions) -> np.ndarray:
         x, mesh, axis=options.axis, v=options.v0,
         schedule=options.schedule_fn, base_threshold=options.base_threshold,
         counters=options.counters or NULL_COUNTERS,
-        pack_keys=options.pack_keys)
+        pack_keys=options.pack_keys, sort_impl=options.sort_impl)
 
 
 register_backend("oracle", _oracle_backend)

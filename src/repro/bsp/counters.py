@@ -3,9 +3,12 @@
 The shard_map implementation is instrumented at every collective call site:
 one superstep per barrier, with analytic per-superstep h (max words in + max
 words out per processor) and w (local work estimate). This reproduces the
-paper's cost analysis measurably (EXPERIMENTS C4/C5) and doubles as a pure
-cost model: the driver can be run in `model_only` mode for arbitrary p
-without executing anything.
+paper's cost analysis measurably (EXPERIMENTS C4/C5). The same accounting
+doubles as a pure cost model: `repro.bsp.suffix_array.estimate_costs`
+replays the driver's superstep schedule for arbitrary (n, p) without
+executing anything, and `tests/core/test_bsp.py` asserts that a measured
+run and the model agree superstep-for-superstep (SM1 = 11, SM2 = 9 per
+round, plus one base gather: S = 20·rounds + 1).
 """
 from __future__ import annotations
 
@@ -36,8 +39,15 @@ class BSPCounters:
         if self.log:
             self.log[-1]["w_post"] = self.log[-1].get("w_post", 0) + int(w)
 
+    @property
+    def rounds(self) -> int:
+        """Completed distributed SM1/SM2 rounds (recursion levels that ran
+        on the mesh, excluding the sequential base)."""
+        return sum(1 for e in self.log if e["label"] == "SM1/halo")
+
     def summary(self) -> dict:
-        return {"S": self.supersteps, "H": self.comm_words, "W": self.work}
+        return {"S": self.supersteps, "H": self.comm_words, "W": self.work,
+                "rounds": self.rounds}
 
 
 NULL_COUNTERS = BSPCounters(enabled=False)

@@ -13,7 +13,28 @@ bucket's processor" h-relation with two dense all_to_all hops and
 
 Both caps are *deterministic* (adversarial-input safe), so total per-shard
 communication is O(m + p²) words per exchange — the paper's O(n/p) given the
-slackness n ≥ p³ (§5, Algorithm 2). Exactly 2 supersteps.
+slackness n ≥ p³ (§5, Algorithm 2). Exactly 2 supersteps: the overflow flag
+is computed *locally* (no extra collective), so the superstep count per
+exchange really is 2 and `BSPCounters` accounting matches execution.
+
+Overflow contract
+-----------------
+`exchange` returns a shard-local `overflowed` flag covering every way a cap
+can be exceeded (hop-1 slots, hop-2 slots, cap_out arrivals). The flag is a
+**bug detector, not a runtime condition**: every call site's cap is sound
+by construction, so a set flag means the caller's bound is wrong. All call
+sites gather the flag across shards (out_specs P(axis)) and raise
+RuntimeError — see `repro.bsp.suffix_array._check_overflow` and
+`repro.bsp.psort.run_psort`. The audit of the four call sites:
+
+  psort bucket exchange   cap_out = 2m + 2p + 4  (regular-sampling bound:
+                          p(p+1) samples ⇒ every bucket < 2·m_tot/p + slack)
+  psort rebalance         cap_out = m            (shard d receives exactly
+                          the rows with gpos ∈ [d·m, (d+1)·m))
+  SM1 rank routing        cap_out = m_loc        (block-major index j is a
+                          bijection onto [0, p·m_loc))
+  SM2 rank un-routing     cap_out = m_loc        (each shard owns exactly
+                          m_loc sample positions)
 
 `impl="ragged"` plugs in jax.lax.ragged_all_to_all on backends that support
 it (TPU); semantics and caps are identical.
@@ -47,9 +68,10 @@ def exchange(
 
     Returns (out_rows int32[cap_out, W], out_valid bool[cap_out],
     overflowed bool[]) — rows arrive grouped by source shard then round-robin
-    order; callers re-sort locally. `overflowed` is a global OR that any
-    capacity was exceeded (diagnosable in tests; impossible when the caller's
-    cap_out bound is sound).
+    order; callers re-sort locally. `overflowed` is this shard's local OR
+    that any capacity was exceeded; callers MUST return it through
+    out_specs P(axis) and raise on `any()` (see the module docstring —
+    a set flag is a caller bug, never a recoverable condition).
     """
     m, W = rows.shape
     cap1, cap2 = hop_caps(m, p, cap_out)
@@ -84,5 +106,5 @@ def exchange(
     out = flat2[order][:cap_out, 1:]
     out_valid = got[order][:cap_out]
     over3 = jnp.sum(got.astype(jnp.int32)) > cap_out
-    overflowed = jax.lax.pmax(over1 | over2 | over3, axis)
+    overflowed = over1 | over2 | over3
     return out, out_valid, overflowed

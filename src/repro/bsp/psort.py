@@ -1,5 +1,6 @@
 """Algorithm 2 — parallel sorting by regular sampling (Shi–Schaeffer /
-Chan–Dehne), generic over key-based and comparator-based orders.
+Chan–Dehne), generic over key-based and comparator-based orders, with
+pluggable **shard-local sorts** (`SAOptions.sort_impl`).
 
 Row contract
 ------------
@@ -8,13 +9,31 @@ Rows are int32[m_local, W] with a fixed column layout:
   col 1..W-2 : payload (keys first for key-mode),
   col W-1    : unique global index — strict total-order tiebreak.
 `lt_fn(a, b) -> bool[N]` must be a strict total order consistent with that
-contract; `local_sort(rows) -> rows` must sort by the same order. The
-key-based fast path uses variadic lax.sort; the comparator path (the paper's
-Lemma-1 suffix order) uses the bitonic network from repro.core.bitonic.
+contract; `local_sort(rows) -> rows` must sort by the same order.
+
+Local-sort implementations
+--------------------------
+==========  ===============================================================
+"radix"     packed keys: the key columns are packed into as few 30-bit
+            int32 lanes as their value range allows (`pack_key_columns` —
+            order-preserving and injective, so lexicographic order and
+            row equality are unchanged), then ONE variadic `lax.sort`
+            orders everything; a Lemma-1 comparator tail (when configured,
+            `make_local_sort_keyed`) runs as a *cond-gated* bitonic pass
+            that only fires when the key sort left equal-key runs.
+"lax"       the same two-phase sort over the raw (unpacked) key columns.
+"bitonic"   the legacy comparator network over full payload rows
+            (`make_local_sort_bitonic`) — O(m log² m) compare-exchanges
+            with the Lemma-1 comparator at every stage. Kept as the
+            executable reference and the `benchmarks/bsp_throughput.py`
+            regression row.
+==========  ===============================================================
 
 Supersteps per call: 6 (sample gather, 2×a2a bucket exchange, count gather,
 2×a2a rebalance) — O(1) as in the paper. Communication per shard:
-O(m_local + p²) words (regular-sampling bucket bound 2m/p + slack).
+O(m_local + p²) words (regular-sampling bucket bound 2m/p + slack); the
+packed-key layout shrinks every exchanged row from ~v to ⌈v·bits/30⌉ key
+lanes, so the same h-relation moves proportionally fewer words.
 """
 from __future__ import annotations
 
@@ -24,14 +43,96 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.bitonic import bitonic_sort, next_pow2
+from ..core.bitonic import bitonic_sort, lex_lt_int, next_pow2
 from ..core.compat import shard_map
 from .exchange import exchange
 from .primitives import lex_lt_rows, searchsorted_rows
 
 INT32_MAX = jnp.iinfo(jnp.int32).max
 
+#: accepted BSP `sort_impl` values ("auto" resolves via
+#: `resolve_bsp_sort_impl`; "pallas" is jax-backend-only and rejected).
+BSP_SORT_IMPLS = ("auto", "radix", "lax", "bitonic")
 
+
+def resolve_bsp_sort_impl(sort_impl: str, pack_keys: bool = True) -> str:
+    """Concrete shard-local sort implementation for the BSP backend.
+
+    ``"auto"`` resolves to the packed-key path (``"radix"``) unless key
+    packing is disabled (`pack_keys=False`), in which case the unpacked
+    multi-key sort (``"lax"``) is used. ``"pallas"`` (valid for the jax
+    backend) has no BSP lowering — shard-local sorts run inside shard_map
+    where the Mosaic kernels cannot be dispatched per shard — and is
+    rejected with an explicit error rather than silently remapped.
+    """
+    if sort_impl == "auto":
+        return "radix" if pack_keys else "lax"
+    if sort_impl not in BSP_SORT_IMPLS:
+        raise ValueError(
+            f"sort_impl {sort_impl!r} is not supported by the bsp backend; "
+            f"expected one of {BSP_SORT_IMPLS}")
+    return sort_impl
+
+
+# --------------------------------------------------------------------------
+# key packing (§Perf SA-iteration A; Rajasekaran & Nicolae's radix-on-
+# packed-keys trick applied to the BSP row layout)
+# --------------------------------------------------------------------------
+def pack_key_columns(cols: jnp.ndarray, lo: int, hi: int) -> jnp.ndarray:
+    """Pack integer key columns with a known value range into 30-bit lanes.
+
+    cols int[m, k] with every value in [lo, hi] → int32[m, ⌈k/per⌉] where
+    `per = ⌊30 / bits⌋` fixed-width fields of `bits = bit_length(hi - lo)`
+    are packed big-endian into each lane. Fixed-width fields make the
+    packing *order-preserving* (lexicographic comparison of the packed
+    lanes equals lexicographic comparison of the original columns) and
+    *injective* (row equality is preserved exactly). Returns `cols`
+    unchanged when a field does not fit at least twice into 30 bits —
+    packing would not reduce the width. 30 bits (not 31) keeps every
+    packed lane strictly below INT32_MAX, so pad rows still sort last.
+    """
+    m, k = cols.shape
+    span = max(1, int(hi) - int(lo))
+    bits = span.bit_length()
+    per = max(1, 30 // bits)
+    if per < 2:
+        return cols
+    shifted = (cols - lo).astype(jnp.int32)
+    ncol = -(-k // per)
+    pad = ncol * per - k
+    if pad:
+        shifted = jnp.concatenate(
+            [shifted, jnp.zeros((m, pad), jnp.int32)], axis=1)
+    shifted = shifted.reshape(m, ncol, per)
+    weights = jnp.asarray([1 << (bits * (per - 1 - j)) for j in range(per)],
+                          jnp.int32)
+    return jnp.sum(shifted * weights[None, None, :], axis=-1)
+
+
+def packed_width(k: int, lo: int, hi: int) -> int:
+    """Number of int32 key lanes `pack_key_columns` produces for k columns."""
+    span = max(1, int(hi) - int(lo))
+    per = max(1, 30 // span.bit_length())
+    return k if per < 2 else -(-k // per)
+
+
+def quantize_sigma(sigma: int) -> int:
+    """Round an alphabet bound up to the largest bound with the same packed
+    field width (`bit_length(sigma + 1)` bits for values in [-1, sigma]).
+
+    The packed key layout — and therefore every traced shape downstream —
+    depends on sigma only through that bit width, but sigma itself is
+    data-dependent (max(x) + 1 per recursion level) and is a *static* jit
+    argument of the SM stages. Quantising collapses the open-ended family
+    of observed maxima onto O(log σ) distinct static values, so nearby
+    inputs (max 200 vs 201) reuse compiled programs instead of retracing.
+    Always ≥ sigma, so the value range stays sound."""
+    return (1 << (int(sigma) + 1).bit_length()) - 2
+
+
+# --------------------------------------------------------------------------
+# pad rows + orders
+# --------------------------------------------------------------------------
 def make_pad_rows(k: int, W: int, tag_base: int = 1 << 29):
     """Pad rows: valid=1, payload=MAX, unique huge tiebreak index."""
     pad = jnp.full((k, W), INT32_MAX, dtype=jnp.int32)
@@ -68,6 +169,108 @@ def make_local_sort_bitonic(lt_fn):
     return local_sort
 
 
+# --------------------------------------------------------------------------
+# Lemma-1 payload order over packed/unpacked keys
+# --------------------------------------------------------------------------
+def make_payload_lt(nk: int, v: int, dsize: int, lam_i1, lam_i2):
+    """Strict total order on Lemma-1 payload rows
+    [valid | keys(nk) | ranks(|D|) | klass | gidx].
+
+    The head (valid flag + nk key lanes — packed or raw characters) is
+    compared lexicographically; head-equal rows (identical v-character
+    windows) are resolved by the paper's Lemma-1 rank lookup
+    `rank[i + Λ[k_i][k_j]]` via the per-class index tables, then by the
+    unique gidx column. `v` bounds the klass clip (pads carry INT32_MAX)."""
+    cr = 1 + nk
+    ck = 1 + nk + dsize
+    cg = 2 + nk + dsize
+
+    def lt(a, b):
+        ka = jnp.clip(a[:, ck], 0, v - 1)
+        kb = jnp.clip(b[:, ck], 0, v - 1)
+        lt_head, eq_head = lex_lt_int(a[:, : 1 + nk], b[:, : 1 + nk])
+        ia = lam_i1[ka, kb]
+        ib = lam_i2[ka, kb]
+        ra = jnp.take_along_axis(a[:, cr:cr + dsize], ia[:, None], axis=1)[:, 0]
+        rb = jnp.take_along_axis(b[:, cr:cr + dsize], ib[:, None], axis=1)[:, 0]
+        return jnp.where(
+            eq_head & (ra != rb), ra < rb,
+            jnp.where(eq_head, a[:, cg] < b[:, cg], lt_head))
+
+    return lt
+
+
+def make_local_sort_keyed(nk: int, v: int, dsize: int, lam_i1, lam_i2):
+    """Two-phase shard-local sort by the `make_payload_lt` order.
+
+    Phase 1 is ONE variadic `lax.sort` over (valid | keys | gidx) — the
+    packed-key fast path that replaces the comparator-bitonic network for
+    the bulk O(m log m) work. Phase 2 resolves *equal-key runs* (suffix
+    pairs sharing their full v-character window — the only pairs Lemma 1
+    is needed for) with a bitonic pass whose comparator is (run id,
+    Λ-rank, slot); the pass is wrapped in `lax.cond` and skipped entirely
+    when the key sort left no ties among valid rows, which is the common
+    case for realistic alphabets. Pad rows never trigger the pass: their
+    relative order is already fixed by the unique gidx sort key.
+    """
+    cr = 1 + nk
+    ck = 1 + nk + dsize
+    cg = 2 + nk + dsize
+
+    def local_sort(rows: jnp.ndarray) -> jnp.ndarray:
+        m, W = rows.shape
+        operands = tuple(rows[:, c] for c in range(1 + nk)) + (
+            rows[:, cg], jnp.arange(m, dtype=jnp.int32))
+        perm = jax.lax.sort(operands, num_keys=2 + nk)[-1]
+        rows = rows[perm]
+        head = rows[:, : 1 + nk]
+        boundary = jnp.ones(m, dtype=bool)
+        if m > 1:
+            boundary = boundary.at[1:].set(
+                jnp.any(head[1:] != head[:-1], axis=1))
+        seg = jnp.cumsum(boundary.astype(jnp.int32)) - 1   # run id, monotone
+
+        def tie_break(rows):
+            m2 = next_pow2(m)
+            pad = m2 - m
+            payload = {
+                "seg": jnp.concatenate(
+                    [seg, jnp.full((pad,), INT32_MAX, jnp.int32)]),
+                "ranks": jnp.concatenate(
+                    [rows[:, cr:ck],
+                     jnp.zeros((pad, dsize), jnp.int32)], axis=0),
+                "klass": jnp.concatenate(
+                    [rows[:, ck], jnp.zeros((pad,), jnp.int32)]),
+                "slot": jnp.arange(m2, dtype=jnp.int32),
+            }
+
+            def lt(a, b):
+                seg_lt = a["seg"] < b["seg"]
+                seg_eq = a["seg"] == b["seg"]
+                ka = jnp.clip(a["klass"], 0, v - 1)
+                kb = jnp.clip(b["klass"], 0, v - 1)
+                ra = jnp.take_along_axis(
+                    a["ranks"], lam_i1[ka, kb][:, None], axis=1)[:, 0]
+                rb = jnp.take_along_axis(
+                    b["ranks"], lam_i2[ka, kb][:, None], axis=1)[:, 0]
+                rank_decides = seg_eq & (ra != rb)
+                # slot order within a run == gidx order (gidx was a sort key)
+                return jnp.where(
+                    rank_decides, ra < rb,
+                    jnp.where(seg_eq, a["slot"] < b["slot"], seg_lt))
+
+            out = bitonic_sort(payload, lt)
+            return rows[out["slot"][:m]]   # pad slots (seg=MAX) sort last
+
+        has_real_tie = jnp.any((~boundary) & (rows[:, 0] == 0))
+        return jax.lax.cond(has_real_tie, tie_break, lambda r: r, rows)
+
+    return local_sort
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2 body
+# --------------------------------------------------------------------------
 def psort_shard_body(
     rows: jnp.ndarray,           # int32[m_local, W]
     *,
@@ -77,7 +280,9 @@ def psort_shard_body(
     local_sort=None,
 ):
     """Body to be run inside shard_map. Returns globally sorted, block-
-    balanced rows int32[m_local, W] (pads last globally)."""
+    balanced rows int32[m_local, W] (pads last globally), plus this shard's
+    local overflow flag (callers MUST gather it across shards and raise —
+    see `repro.bsp.exchange`)."""
     if lt_fn is None:
         lt_fn = lex_lt_full
     if local_sort is None:
@@ -141,23 +346,31 @@ def psort_shard_body(
     return out, (over1 | over2)
 
 
-def run_psort(mesh, axis: str, rows_global, *, lt_fn=None, local_sort=None):
+def run_psort(mesh, axis: str, rows_global, *, lt_fn=None, local_sort=None,
+              check: bool = True):
     """Convenience wrapper: jit(shard_map(psort_shard_body)) over a 1-D mesh.
 
-    rows_global: int32[p*m, W] sharded (or shardable) on dim 0.
+    rows_global: int32[p*m, W] sharded (or shardable) on dim 0. Returns
+    (rows_sorted, over bool[p]); raises RuntimeError when any shard's
+    exchange overflowed (pass ``check=False`` to inspect the flags instead).
     """
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     p = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
 
     @functools.partial(jax.jit, out_shardings=(
-        NamedSharding(mesh, P(axis)), NamedSharding(mesh, P())))
+        NamedSharding(mesh, P(axis)), NamedSharding(mesh, P(axis))))
     @functools.partial(
         shard_map, mesh=mesh, in_specs=(P(axis),),
-        out_specs=(P(axis), P()))
+        out_specs=(P(axis), P(axis)))
     def fn(rows):
         out, over = psort_shard_body(rows, p=p, axis=axis, lt_fn=lt_fn,
                                      local_sort=local_sort)
         return out, over[None]
 
-    return fn(rows_global)
+    out, over = fn(rows_global)
+    if check and bool(np.asarray(over).any()):
+        raise RuntimeError(
+            "psort exchange capacity overflow — the deterministic two-hop "
+            "caps were exceeded (bug in the cap_out bound, not bad input)")
+    return out, over

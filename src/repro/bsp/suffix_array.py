@@ -10,13 +10,31 @@ Round structure (per recursion level i, modulus v = v_i, cover D = D_i):
        (|X'| ≤ threshold ≈ n/p) gathers X' and solves with the single-device
        DC-v (the paper's "send to processor 0").
   SM2  (9 supersteps): route sample ranks back to position owners → rank/char
-       halos → build self-contained Lemma-1 payloads → Algorithm-2 psort in
-       comparator mode (the fused Steps 2–4, DESIGN §3.3) → SA.
+       halos → build self-contained Lemma-1 payloads → Algorithm-2 psort
+       (the fused Steps 2–4, DESIGN §3.3) → SA.
+
+The shard-local sorts inside both psorts are pluggable (`sort_impl`,
+resolved by `repro.bsp.psort.resolve_bsp_sort_impl`): the default "radix"
+path packs the SM1 super-character windows AND the SM2 Lemma-1 payload
+characters into 30-bit int32 key lanes and key-sorts them with ONE variadic
+lax.sort per call (Lemma-1 comparisons only run on equal-window runs, via a
+cond-gated bitonic pass); "lax" is the same two-phase sort on unpacked
+columns; "bitonic" is the legacy full comparator network, kept as the
+regression row of `benchmarks/bsp_throughput.py`.
 
 All shapes are data-independent functions of (n, p, schedule): the index
 domain is padded to n_pv = p·v·⌈n/(p·v)⌉ so every shard holds n_loc = n_pv/p
 characters (a multiple of v) and exactly m_loc = |D|·n_loc/v sample windows.
 Sentinel-pad suffixes sort first and are trimmed at the end.
+
+Superstep accounting: the counts logged by `BSPCounters` (SM1 = 11, SM2 = 9
+per round — `_round_cost`) match the collectives the code executes barrier
+for barrier: SM1 = halo ppermute + 6 psort collectives + boundary ppermute
++ rank-offset all_gather + 2 routing all_to_alls; SM2 = 2 un-routing
+all_to_alls + halo ppermute + 6 psort collectives. Diagnostic flags
+(overflow, all-distinct) are computed shard-locally and gathered through
+the stage outputs, so they add no barriers. `estimate_costs` replays the
+same schedule analytically for arbitrary (n, p).
 """
 from __future__ import annotations
 
@@ -28,42 +46,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core.bitonic import lex_lt_int
 from ..core.compat import shard_map
 from ..core.difference_cover import cover_tables
 from ..core.dcv_jax import suffix_array_jax
 from ..core.seq_ref import accelerated_next_v
 from .counters import BSPCounters, NULL_COUNTERS
 from .exchange import exchange
-from .psort import (lex_lt_full, local_sort_lex, make_local_sort_bitonic,
-                    make_pad_rows, psort_shard_body)
+from .psort import (make_local_sort_bitonic, make_local_sort_keyed,
+                    make_pad_rows, make_payload_lt, pack_key_columns,
+                    packed_width, psort_shard_body, quantize_sigma,
+                    resolve_bsp_sort_impl)
 
 INT32_MAX = np.int32(np.iinfo(np.int32).max)
-
-
-# --------------------------------------------------------------------------
-# payload comparator (Lemma 1)
-# --------------------------------------------------------------------------
-def make_payload_lt(v: int, dsize: int, lam_i1, lam_i2):
-    """Strict total order on payload rows
-    [valid | chars(v) | ranks(|D|) | klass | gidx]."""
-    cr = 1 + v
-    ck = 1 + v + dsize
-    cg = 2 + v + dsize
-
-    def lt(a, b):
-        ka = jnp.clip(a[:, ck], 0, v - 1)
-        kb = jnp.clip(b[:, ck], 0, v - 1)
-        lt_head, eq_head = lex_lt_int(a[:, : 1 + v], b[:, : 1 + v])
-        ia = lam_i1[ka, kb]
-        ib = lam_i2[ka, kb]
-        ra = jnp.take_along_axis(a[:, cr:cr + dsize], ia[:, None], axis=1)[:, 0]
-        rb = jnp.take_along_axis(b[:, cr:cr + dsize], ib[:, None], axis=1)[:, 0]
-        return jnp.where(
-            eq_head & (ra != rb), ra < rb,
-            jnp.where(eq_head, a[:, cg] < b[:, cg], lt_head))
-
-    return lt
 
 
 # --------------------------------------------------------------------------
@@ -83,26 +77,11 @@ def round_geometry(n: int, p: int, v: int):
 # SM1: sample sort + X' construction
 # --------------------------------------------------------------------------
 def pack_window_columns(win: jnp.ndarray, sigma: int):
-    """Radix key packing (§Perf SA-iteration A): pack several characters of
-    a known alphabet bound σ into each int32 sort column, big-endian, order-
-    preserving (fixed-width fields ⇒ lexicographic order is unchanged).
-    Characters are shifted +1 so the -1 sentinel packs as 0. Cuts the sort/
-    exchange width from v to ⌈v·bits/30⌉ columns."""
-    v = win.shape[1]
-    bits = max(1, int(math.ceil(math.log2(max(sigma + 2, 2)))))
-    per = max(1, 30 // bits)
-    if per < 2:
-        return win
-    shifted = (win + 1).astype(jnp.int32)                  # [m, v] ∈ [0, σ+1]
-    ncol = -(-v // per)
-    pad = ncol * per - v
-    if pad:
-        shifted = jnp.concatenate(
-            [shifted, jnp.zeros((win.shape[0], pad), jnp.int32)], axis=1)
-    shifted = shifted.reshape(win.shape[0], ncol, per)
-    weights = jnp.asarray([1 << (bits * (per - 1 - j)) for j in range(per)],
-                          jnp.int32)
-    return jnp.sum(shifted * weights[None, None, :], axis=-1)
+    """Radix key packing for SM1 windows (§Perf SA-iteration A): characters
+    are shifted +1 so the -1 sentinel packs as 0, then packed into 30-bit
+    int32 lanes by `repro.bsp.psort.pack_key_columns` (order-preserving,
+    injective). Cuts the sort/exchange width from v to ⌈v·bits/30⌉ lanes."""
+    return pack_key_columns(win, -1, sigma)
 
 
 def _sm1_body(xloc, *, p, v, n_loc, m_loc, tabs, axis, sigma=None):
@@ -142,8 +121,9 @@ def _sm1_body(xloc, *, p, v, n_loc, m_loc, tabs, axis, sigma=None):
     sums = jax.lax.all_gather(loc_sum[None], axis).reshape(p)
     offset = (jnp.cumsum(sums) - sums)[me]
     rank = offset + jnp.cumsum(b) - 1                       # dense global rank
-    distinct = jax.lax.pmin(
-        jnp.min(b), axis) == 1                              # all boundaries
+    # shard-local "every window here started a run"; the driver ANDs the
+    # per-shard flags — no pmin barrier needed.
+    distinct = jnp.min(b) == 1
 
     # --- route (j, rank) to X' owners; j = block-major sample index ---
     d_idx = np.full(v, -1, np.int32)
@@ -167,7 +147,8 @@ def _sm1_body(xloc, *, p, v, n_loc, m_loc, tabs, axis, sigma=None):
 # --------------------------------------------------------------------------
 # SM2: rank scatter + fused Lemma-1 payload sort
 # --------------------------------------------------------------------------
-def _sm2_body(xloc, sa_rank_loc, *, p, v, n_loc, m_loc, tabs, axis):
+def _sm2_body(xloc, sa_rank_loc, *, p, v, n_loc, m_loc, tabs, axis,
+              impl="bitonic", sigma=None):
     dsize = len(tabs.D)
     me = jax.lax.axis_index(axis)
     D_np = np.asarray(tabs.D, np.int32)
@@ -202,17 +183,34 @@ def _sm2_body(xloc, sa_rank_loc, *, p, v, n_loc, m_loc, tabs, axis):
     klass = gidx % v
     shifts = jnp.asarray(tabs.shifts, jnp.int32)             # [v, |D|]
     rvals = rank_loc[jnp.clip(offs[:, None] + shifts[klass], 0, n_loc + v - 1)]
-    payload = jnp.concatenate([
-        jnp.zeros((n_loc, 1), jnp.int32), chars, rvals,
-        klass[:, None], gidx[:, None]], axis=1)
 
     lam_i1 = jnp.asarray(tabs.lam_idx1, jnp.int32)
     lam_i2 = jnp.asarray(tabs.lam_idx2, jnp.int32)
-    lt = make_payload_lt(v, dsize, lam_i1, lam_i2)
-    out, over2 = psort_shard_body(
-        payload, p=p, axis=axis, lt_fn=lt,
-        local_sort=make_local_sort_bitonic(lt))
-    sa = out[:, 2 + v + dsize]                               # gidx column
+    if impl == "bitonic":
+        # legacy: the Lemma-1 comparator at every compare-exchange of the
+        # local bitonic network, raw characters as the head.
+        payload = jnp.concatenate([
+            jnp.zeros((n_loc, 1), jnp.int32), chars, rvals,
+            klass[:, None], gidx[:, None]], axis=1)
+        lt = make_payload_lt(v, v, dsize, lam_i1, lam_i2)
+        out, over2 = psort_shard_body(
+            payload, p=p, axis=axis, lt_fn=lt,
+            local_sort=make_local_sort_bitonic(lt))
+        sa = out[:, 2 + v + dsize]                           # gidx column
+    else:
+        # keyed: pack ("radix") or keep raw ("lax") the character head,
+        # key-sort it, and resolve equal-window runs with the cond-gated
+        # Lemma-1 pass — see repro.bsp.psort.make_local_sort_keyed.
+        keys = pack_key_columns(chars, -1, sigma) if sigma is not None else chars
+        nk = keys.shape[1]
+        payload = jnp.concatenate([
+            jnp.zeros((n_loc, 1), jnp.int32), keys, rvals,
+            klass[:, None], gidx[:, None]], axis=1)
+        lt = make_payload_lt(nk, v, dsize, lam_i1, lam_i2)
+        out, over2 = psort_shard_body(
+            payload, p=p, axis=axis, lt_fn=lt,
+            local_sort=make_local_sort_keyed(nk, v, dsize, lam_i1, lam_i2))
+        sa = out[:, 2 + nk + dsize]                          # gidx column
     return sa, (over | over2)[None]
 
 
@@ -234,12 +232,13 @@ def _sm1(xg, *, p, v, n_loc, m_loc, vkey, axis, mesh_holder, sigma=None):
 
 @functools.partial(
     jax.jit, static_argnames=("p", "v", "n_loc", "m_loc", "vkey", "axis",
-                              "mesh_holder"))
-def _sm2(xg, sa_rank, *, p, v, n_loc, m_loc, vkey, axis, mesh_holder):
+                              "mesh_holder", "impl", "sigma"))
+def _sm2(xg, sa_rank, *, p, v, n_loc, m_loc, vkey, axis, mesh_holder,
+         impl="bitonic", sigma=None):
     mesh = mesh_holder.mesh
     tabs = cover_tables(v)
     body = functools.partial(_sm2_body, p=p, v=v, n_loc=n_loc, m_loc=m_loc,
-                             tabs=tabs, axis=axis)
+                             tabs=tabs, axis=axis, impl=impl, sigma=sigma)
     return shard_map(
         body, mesh=mesh, in_specs=(P(axis), P(axis)),
         out_specs=(P(axis), P(axis)))(xg, sa_rank)
@@ -286,6 +285,28 @@ def _round_cost(label, n_loc, m_loc, p, v, dsize, W, counters):
         counters.superstep(f"{label}/{name}", h=h, w=w)
 
 
+def _check_overflow(over, stage: str) -> None:
+    """Turn a gathered per-shard overflow flag into a hard error."""
+    if bool(np.asarray(over).any()):
+        raise RuntimeError(
+            f"BSP exchange capacity overflow in {stage}: the deterministic "
+            f"two-hop caps were exceeded — a bug in the caller's cap_out "
+            f"bound (see repro.bsp.exchange), never an input-data error")
+
+
+def _sm_widths(v: int, sigma: int, impl: str, pack_keys: bool):
+    """(SM1 sigma-or-None, SM1 key lanes, SM2 sigma-or-None, SM2 key lanes).
+
+    "radix" packs both stages; "lax" packs neither; "bitonic" keeps the
+    legacy behaviour (SM1 packing per `pack_keys`, SM2 raw characters)."""
+    sm1_sigma = sigma if (impl == "radix"
+                          or (impl == "bitonic" and pack_keys)) else None
+    w1 = packed_width(v, -1, sigma) if sm1_sigma is not None else v
+    sm2_sigma = sigma if impl == "radix" else None
+    nk2 = packed_width(v, -1, sigma) if sm2_sigma is not None else v
+    return sm1_sigma, w1, sm2_sigma, nk2
+
+
 def suffix_array_bsp(
     x,
     mesh: Mesh,
@@ -295,12 +316,17 @@ def suffix_array_bsp(
     base_threshold: int | None = None,
     counters: BSPCounters = NULL_COUNTERS,
     pack_keys: bool = True,
+    sort_impl: str = "auto",
     _n0: int | None = None,
 ) -> np.ndarray:
-    """Distributed suffix array of x over a 1-D mesh. Returns np.int32[n]."""
+    """Distributed suffix array of x over a 1-D mesh. Returns np.int32[n].
+
+    `sort_impl` selects the shard-local sort family inside both Algorithm-2
+    psorts ("auto" → packed-key "radix"; see `repro.bsp.psort`)."""
     x = np.asarray(x)
     n = int(len(x))
     p = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+    impl = resolve_bsp_sort_impl(sort_impl, pack_keys)
     if p == 1:
         # degenerate mesh: Algorithm 2's splitter machinery needs p ≥ 2;
         # a 1-processor BSP run IS the single-device algorithm.
@@ -327,19 +353,15 @@ def suffix_array_bsp(
         xp_np[:n] = x_np
         xg = jax.device_put(jnp.asarray(xp_np), shard)
 
-        sigma = int(x_np.max()) + 1 if pack_keys else None
+        # quantized so the data-dependent max collapses onto O(log σ)
+        # distinct static-arg values (same packed bit width, no retrace)
+        sigma = quantize_sigma(int(x_np.max()) + 1)
+        sm1_sigma, w1, sm2_sigma, nk2 = _sm_widths(v, sigma, impl, pack_keys)
         xprime, distinct, over = _sm1(
             xg, p=p, v=v, n_loc=n_loc, m_loc=m_loc, vkey=v, axis=axis,
-            mesh_holder=holder, sigma=sigma)
-        if sigma is not None:            # packed key width (§Perf SA-iter A)
-            bits = max(1, math.ceil(math.log2(max(sigma + 2, 2))))
-            per = max(1, 30 // bits)
-            w_keys = -(-v // per) if per >= 2 else v
-        else:
-            w_keys = v
-        _round_cost("SM1", n_loc, m_loc, p, v, dsize, w_keys + 2, counters)
-        if bool(np.asarray(over).any()):
-            raise RuntimeError("BSP exchange capacity overflow (bug)")
+            mesh_holder=holder, sigma=sm1_sigma)
+        _round_cost("SM1", n_loc, m_loc, p, v, dsize, w1 + 2, counters)
+        _check_overflow(over, "SM1")
 
         if bool(np.asarray(distinct).all()):
             sa_rank = xprime                                  # ranks are final
@@ -351,10 +373,11 @@ def suffix_array_bsp(
             sa_rank = jax.device_put(jnp.asarray(inv), shard)
 
         sa, over = _sm2(xg, sa_rank, p=p, v=v, n_loc=n_loc, m_loc=m_loc,
-                        vkey=v, axis=axis, mesh_holder=holder)
-        _round_cost("SM2", n_loc, m_loc, p, v, dsize, 3 + v + dsize, counters)
-        if bool(np.asarray(over).any()):
-            raise RuntimeError("BSP exchange capacity overflow (bug)")
+                        vkey=v, axis=axis, mesh_holder=holder, impl=impl,
+                        sigma=sm2_sigma)
+        _round_cost("SM2", n_loc, m_loc, p, v, dsize, 3 + nk2 + dsize,
+                    counters)
+        _check_overflow(over, "SM2")
         sa = np.asarray(sa).reshape(-1)
         return sa[sa < n]                                     # trim pads
 
@@ -363,3 +386,59 @@ def suffix_array_bsp(
         counters.superstep("base/gather", h=n, w=n * 4)
         return suffix_array_jax(x, v=3).astype(np.int32)
     return rec(x.astype(np.int32), v).astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# analytic cost model (C4/C5 — "model only" mode)
+# --------------------------------------------------------------------------
+def estimate_costs(
+    n: int,
+    p: int,
+    *,
+    v: int = 3,
+    schedule=accelerated_next_v,
+    base_threshold: int | None = None,
+    sort_impl: str = "auto",
+    pack_keys: bool = True,
+    sigma: int = 256,
+) -> BSPCounters:
+    """Replay `suffix_array_bsp`'s superstep schedule without executing it.
+
+    Returns a `BSPCounters` holding the supersteps/communication/work a run
+    would log on an input that never triggers the all-distinct recursion
+    short-circuit (the worst case — e.g. an all-equal text, for which the
+    replay is *exact*: same labels, same S). `sigma` is the level-0
+    alphabet bound; deeper levels use the dense-rank bound m_tot, so H/W
+    are estimates while S and the label sequence are structural.
+
+    The replay instantiates each level's difference-cover tables
+    (`round_geometry`), so call it with realistic (n, p); for asymptotic
+    round counting at astronomic sizes use the capped model in
+    `benchmarks/supersteps.py`.
+    """
+    ct = BSPCounters()
+    impl = resolve_bsp_sort_impl(sort_impl, pack_keys)
+    n = int(n)
+    if p == 1:
+        ct.superstep("base/gather", h=n, w=n * 4)
+        return ct
+    if base_threshold is None:
+        base_threshold = max(1024, n // p)
+    if n <= max(base_threshold, 2 * p * 3, 8):
+        ct.superstep("base/gather", h=n, w=n * 4)
+        return ct
+
+    def rec(nn: int, vv: int, sig: int) -> None:
+        if nn <= max(base_threshold, 2 * p * vv, 8):
+            ct.superstep("base/gather", h=nn, w=nn * 4)
+            return
+        vv = int(min(max(vv, 3), nn))
+        n_pv, n_loc, m_loc, m_tot, tabs = round_geometry(nn, p, vv)
+        dsize = len(tabs.D)
+        _, w1, _, nk2 = _sm_widths(vv, quantize_sigma(sig), impl, pack_keys)
+        _round_cost("SM1", n_loc, m_loc, p, vv, dsize, w1 + 2, ct)
+        rec(m_tot, schedule(vv, dsize, m_tot), m_tot)
+        _round_cost("SM2", n_loc, m_loc, p, vv, dsize, 3 + nk2 + dsize, ct)
+
+    rec(n, max(v, 3), sigma)
+    return ct

@@ -15,7 +15,8 @@ class SAConfig:
     v0: int = 3
     schedule: str = "accelerated"   # or "fixed"
     base_threshold: int = 4096
-    sort_impl: str = "auto"     # jax-backend sort primitive (see SAOptions)
+    sort_impl: str = "auto"     # sort primitive: jax hot path AND the BSP
+                                # shard-local sorts (see SAOptions.sort_impl)
     cache: bool = True          # compiled-builder cache + bucketed padding
     pack_keys: bool = True
     axis: str = "bsp"

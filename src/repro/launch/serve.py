@@ -60,10 +60,12 @@ def serve_sa_queries(cfg, *, n_chars: int, n_docs: int, n_queries: int,
     mesh over all devices when p > 1 (the paper's Algorithm 3), else the
     vectorised single-device DC-v."""
     from ..api import SuffixArrayIndex, builder_cache_stats
+    from ..bsp.counters import BSPCounters
     from .mesh import make_sa_mesh
 
     mesh = make_sa_mesh() if len(jax.devices()) > 1 else None
-    opts = cfg.to_options(mesh=mesh)
+    counters = BSPCounters() if mesh is not None else None
+    opts = cfg.to_options(mesh=mesh, counters=counters)
     rng = np.random.default_rng(seed)
     doc_len = max(n_chars // max(n_docs, 1), pattern_len + 1)
     docs = [rng.integers(0, 256, size=doc_len) for _ in range(n_docs)]
@@ -74,6 +76,13 @@ def serve_sa_queries(cfg, *, n_chars: int, n_docs: int, n_queries: int,
     print(f"indexed {index.n} chars / {index.n_docs} docs in {build_s:.2f}s "
           f"(backend={opts.resolve_backend()}, "
           f"builder_cache={builder_cache_stats()})")
+    if counters is not None and counters.supersteps:
+        from ..bsp.psort import resolve_bsp_sort_impl
+        impl = resolve_bsp_sort_impl(opts.sort_impl, opts.pack_keys)
+        print(f"bsp costs: S={counters.supersteps} supersteps over "
+              f"{counters.rounds} distributed rounds, "
+              f"H={counters.comm_words} words, W={counters.work} ops "
+              f"(sort_impl={impl})")
 
     # half the queries are planted substrings (must hit), half random
     hits = 0

@@ -1,0 +1,114 @@
+"""Regression tests for `SuffixArrayIndex` edge cases: empty corpora,
+empty documents, n == 0 queries, and the doc_of/doc_offset range contract
+(empty results, never a crash or a silent wrap-around)."""
+import numpy as np
+import pytest
+
+from repro.api import SuffixArrayIndex
+from repro.api.index import encode_docs
+
+
+# ---------------------------------------------------------------- empties
+def test_from_docs_empty_corpus_queries_are_empty():
+    idx = SuffixArrayIndex.from_docs([])
+    assert idx.n == 0 and idx.n_docs == 0 and idx.sep_count == 0
+    assert idx.count([1, 2]) == 0
+    assert idx.count([]) == 0
+    assert idx.locate([1, 2]).tolist() == []
+    assert idx.locate_docs([1]).shape == (0, 2)
+    st = idx.ngram_stats(3)
+    assert (st.total, st.distinct) == (0, 0)
+    assert idx.lcp.tolist() == []
+    assert idx.duplicate_spans(2) == []
+    assert idx.cross_doc_duplicates(2) == []
+
+
+def test_build_empty_text_queries_are_empty():
+    idx = SuffixArrayIndex.build(np.zeros(0, np.int64))
+    assert idx.n == 0
+    assert idx.count([0]) == 0
+    assert idx.locate([0]).tolist() == []
+    assert idx.ngram_stats(1).total == 0
+    assert idx.lcp.tolist() == []
+
+
+def test_encode_docs_empty():
+    text, starts, n_docs = encode_docs([])
+    assert len(text) == 0 and len(starts) == 0 and n_docs == 0
+
+
+def test_from_docs_all_empty_docs():
+    idx = SuffixArrayIndex.from_docs([[], []])
+    # two separators only, no payload
+    assert idx.n == 2 and idx.n_docs == 2
+    assert idx.count([0]) == 0          # payload alphabet is empty
+    assert idx.ngram_stats(1).total == 0
+    assert idx.duplicate_spans(1) == []
+    assert idx.cross_doc_duplicates(1) == []
+
+
+def test_from_docs_empty_doc_mixed_with_real():
+    idx = SuffixArrayIndex.from_docs([[], [1, 2, 1, 2]])
+    pos = idx.locate([1, 2])
+    assert len(pos) == 2
+    docs = idx.locate_docs([1, 2])
+    assert docs[:, 0].tolist() == [1, 1]
+    assert docs[:, 1].tolist() == [0, 2]
+    assert idx.count([2, 1]) == 1
+
+
+# ------------------------------------------------- doc_of / doc_offset
+def test_doc_of_empty_index_rejects_positions():
+    idx = SuffixArrayIndex.from_docs([])
+    with pytest.raises(IndexError):
+        idx.doc_of(0)
+    with pytest.raises(IndexError):
+        idx.doc_offset(0)
+
+
+def test_doc_of_empty_position_array_is_empty():
+    idx = SuffixArrayIndex.from_docs([])
+    assert idx.doc_of(np.zeros(0, np.int64)).tolist() == []
+    doc, off = idx.doc_offset(np.zeros(0, np.int64))
+    assert doc.tolist() == [] and off.tolist() == []
+
+
+def test_doc_of_out_of_range_raises_not_wraps():
+    idx = SuffixArrayIndex.from_docs([[5, 6], [7]])
+    with pytest.raises(IndexError):
+        idx.doc_of(-1)                  # used to wrap to the last document
+    with pytest.raises(IndexError):
+        idx.doc_of(idx.n)
+    with pytest.raises(IndexError):
+        idx.doc_of(np.array([0, idx.n + 3]))
+    # in-range still exact
+    assert idx.doc_of(0) == 0
+    assert idx.doc_of(idx.n - 1) == 1
+
+
+def test_doc_offset_roundtrip():
+    docs = [[3, 4, 5], [6], [7, 8]]
+    idx = SuffixArrayIndex.from_docs(docs)
+    for d, doc in enumerate(docs):
+        for off in range(len(doc)):
+            pos = int(idx.doc_starts[d]) + off
+            dd, oo = idx.doc_offset(pos)
+            assert (dd, int(oo)) == (d, off)
+
+
+# ------------------------------------------------------------ n==0 probes
+def test_suffix_cmp_no_wraparound_on_empty_index():
+    idx = SuffixArrayIndex.from_docs([])
+    # direct probe of the vectorised comparator: on n==0 every suffix is
+    # past-the-end, strictly below any pattern — and never wraps text[-1].
+    out = idx._suffix_cmp(np.array([0]), np.array([3]))
+    assert out.tolist() == [-1]
+    out = idx._suffix_cmp(np.array([0, 1]), np.zeros(0, np.int64))
+    assert out.tolist() == [0, 0]       # empty pattern prefixes everything
+
+
+def test_pattern_longer_than_text():
+    idx = SuffixArrayIndex.build(np.array([1, 2]))
+    assert idx.count([1, 2, 3]) == 0
+    assert idx.locate([1, 2, 3]).tolist() == []
+    assert idx.count([1, 2]) == 1

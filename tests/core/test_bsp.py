@@ -102,6 +102,166 @@ def test_bsp_suffix_array_matches_oracle():
     """)
 
 
+def test_bsp_sort_impls_edge_texts():
+    """Packed-key / unpacked-key / comparator local sorts all match the
+    oracle, including on all-equal and adversarial-periodic texts."""
+    _run("""
+    import jax, numpy as np
+    from jax.sharding import Mesh
+    from repro.bsp.suffix_array import suffix_array_bsp
+    from repro.core.oracle import suffix_array_doubling
+    mesh = Mesh(np.array(jax.devices()).reshape(8), ("bsp",))
+    rng = np.random.default_rng(0)
+    texts = [rng.integers(0, 256, size=1000),      # realistic bytes
+             np.zeros(600, np.int64),              # all-equal (max ties)
+             np.tile([1, 0, 2, 1, 0], 120)]        # adversarial periodic
+    for impl in ("radix", "lax", "bitonic"):
+        for x in texts:
+            got = suffix_array_bsp(x, mesh, base_threshold=128,
+                                   sort_impl=impl)
+            want = suffix_array_doubling(np.asarray(x, np.int64))
+            assert np.array_equal(got, want), impl
+    print("OK")
+    """, timeout=900)
+
+
+def test_bsp_nonpow2_meshes_match_oracle():
+    """Algorithm 3 on non-power-of-two p (the splitter machinery and the
+    two-hop exchange caps make no power-of-two assumption)."""
+    _run("""
+    import jax, numpy as np
+    from jax.sharding import Mesh
+    from repro.bsp.suffix_array import suffix_array_bsp
+    from repro.core.oracle import suffix_array_doubling
+    devs = np.array(jax.devices())
+    rng = np.random.default_rng(1)
+    for p in (3, 5, 6):
+        mesh = Mesh(devs[:p].reshape(p), ("bsp",))
+        for x in [rng.integers(0, 9, size=1000), np.tile([3, 3, 1], 220)]:
+            got = suffix_array_bsp(x, mesh, base_threshold=128)
+            want = suffix_array_doubling(np.asarray(x, np.int64))
+            assert np.array_equal(got, want), p
+    print("OK")
+    """, timeout=900)
+
+
+def test_bsp_counters_match_estimate_and_overflow_is_hard_error():
+    """C4/C5 reconciliation: measured superstep log == the analytic replay
+    (`estimate_costs`) on a worst-case text, with SM1=11 / SM2=9 per round;
+    and exchange capacity overflow is a detected, hard error."""
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.bsp.counters import BSPCounters
+    from repro.bsp.exchange import exchange
+    from repro.bsp.suffix_array import estimate_costs, suffix_array_bsp
+    from repro.core.compat import shard_map
+    import repro.bsp.psort as psort
+
+    mesh = Mesh(np.array(jax.devices()).reshape(8), ("bsp",))
+
+    # --- measured == analytic replay (all-equal text never short-circuits)
+    x = np.zeros(3000, np.int64)
+    ct = BSPCounters()
+    sa = suffix_array_bsp(x, mesh, base_threshold=64, counters=ct)
+    assert np.array_equal(sa, np.arange(3000)[::-1])
+    est = estimate_costs(3000, 8, base_threshold=64, sigma=1)
+    assert ct.supersteps == est.supersteps
+    assert [e["label"] for e in ct.log] == [e["label"] for e in est.log]
+    labels = [e["label"] for e in ct.log]
+    assert labels.count("base/gather") == 1
+    sm1 = sum(1 for l in labels if l.startswith("SM1/"))
+    sm2 = sum(1 for l in labels if l.startswith("SM2/"))
+    assert sm1 == 11 * ct.rounds and sm2 == 9 * ct.rounds
+    assert ct.supersteps == 20 * ct.rounds + 1 and ct.rounds >= 2
+
+    # --- exchange overflow is detected (cap_out far below the h-relation)
+    p, m = 8, 32
+    rows = np.stack([np.arange(p * m, dtype=np.int32),
+                     np.arange(p * m, dtype=np.int32)], axis=1)
+    dest = np.zeros((p * m, 1), np.int32)          # everything to shard 0
+    def f(r, d):
+        out, valid, over = exchange(r, d[:, 0], jnp.ones(m, bool), p=p,
+                                    cap_out=4, axis="bsp")
+        return out, valid[:, None], over[None]
+    fn = jax.jit(shard_map(f, mesh=mesh, in_specs=(P("bsp"), P("bsp")),
+                           out_specs=(P("bsp"), P("bsp"), P("bsp"))))
+    _, _, over = fn(jnp.asarray(rows), jnp.asarray(dest))
+    assert bool(np.asarray(over).any())
+
+    # --- run_psort surfaces a set flag as RuntimeError (flag forced on one
+    #     shard; real flag-raising is covered by the cap_out=4 case above)
+    orig = psort.exchange
+    def forced(rows, dest, valid, *, p, cap_out, axis):
+        out, val, over = orig(rows, dest, valid, p=p, cap_out=cap_out,
+                              axis=axis)
+        return out, val, over | (jax.lax.axis_index(axis) == 0)
+    psort.exchange = forced
+    try:
+        N = 512
+        rows_g = jnp.asarray(np.stack(
+            [np.zeros(N, np.int32), np.arange(N, dtype=np.int32) % 7,
+             np.arange(N, dtype=np.int32)], axis=1))
+        try:
+            psort.run_psort(mesh, "bsp", rows_g)
+            raise SystemExit("expected RuntimeError")
+        except RuntimeError as e:
+            assert "overflow" in str(e)
+    finally:
+        psort.exchange = orig
+
+    # --- the driver-side check itself is a hard error on any set flag
+    from repro.bsp.suffix_array import _check_overflow
+    _check_overflow(np.zeros(8, bool), "SM1")          # all clear: no-op
+    try:
+        _check_overflow(np.asarray([False, True] + [False] * 6), "SM1")
+        raise SystemExit("expected RuntimeError")
+    except RuntimeError as e:
+        assert "SM1" in str(e)
+    print("OK")
+    """, timeout=900)
+
+
+def test_bsp_p1_degenerate_and_estimate_model():
+    """p=1 degenerates to the single-device path (one base superstep), and
+    the analytic model shows the accelerated schedule's round advantage."""
+    import numpy as np
+
+    from repro.bsp.counters import BSPCounters
+    from repro.bsp.suffix_array import estimate_costs, suffix_array_bsp
+    from repro.core.oracle import suffix_array_doubling
+    from repro.core.seq_ref import fixed_next_v
+    from repro.launch.mesh import make_sa_mesh
+
+    x = np.random.default_rng(3).integers(0, 5, 600)
+    ct = BSPCounters()
+    got = suffix_array_bsp(x, make_sa_mesh(1), counters=ct)
+    assert np.array_equal(got, suffix_array_doubling(x))
+    assert ct.supersteps == 1 and ct.rounds == 0
+    assert estimate_costs(600, 1).supersteps == 1
+
+    # accelerated schedule: never more rounds than fixed-v, and an
+    # O(log log) round count at realistic sizes (paper C4)
+    for n, p in ((1 << 20, 16), (1 << 22, 64)):
+        acc = estimate_costs(n, p)
+        fix = estimate_costs(n, p, schedule=fixed_next_v)
+        assert acc.rounds <= fix.rounds
+        assert acc.supersteps == 20 * acc.rounds + 1
+        assert acc.rounds <= 6          # log log n envelope at these sizes
+
+
+def test_bsp_rejects_pallas_sort_impl():
+    import numpy as np
+    import pytest
+
+    from repro.bsp.suffix_array import suffix_array_bsp
+    from repro.launch.mesh import make_sa_mesh
+
+    with pytest.raises(ValueError, match="pallas"):
+        suffix_array_bsp(np.arange(100) % 7, make_sa_mesh(1),
+                         sort_impl="pallas")
+
+
 def test_bsp_superstep_scaling_model():
     """C4: cost-model round counts — accelerated O(log log p) vs fixed."""
     from repro.core.seq_ref import accelerated_next_v, fixed_next_v

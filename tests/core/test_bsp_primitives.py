@@ -6,6 +6,8 @@ from hypothesis import given, settings, strategies as st
 from repro.bsp.exchange import hop_caps
 from repro.bsp.primitives import (counts_per_bucket, lex_lt_rows,
                                   searchsorted_rows, within_group_index)
+from repro.bsp.psort import (pack_key_columns, packed_width, quantize_sigma,
+                             resolve_bsp_sort_impl)
 from repro.bsp.suffix_array import pack_window_columns
 
 
@@ -62,6 +64,54 @@ def test_pack_window_columns_preserves_order(n, v, seed):
         for j in range(min(n, 10)):
             assert (tuple(win[i]) == tuple(win[j])) == \
                 (tuple(packed[i]) == tuple(packed[j]))
+
+
+@given(st.integers(2, 40), st.integers(1, 9), st.integers(0, 50),
+       st.integers(-1, 4))
+@settings(max_examples=40, deadline=None)
+def test_pack_key_columns_generic_ranges(n, k, seed, lo):
+    """The generic packer preserves lexicographic order and row equality
+    for arbitrary [lo, hi] ranges, and its width matches `packed_width`."""
+    rng = np.random.default_rng(seed)
+    hi = lo + int(rng.integers(1, 500))
+    cols = rng.integers(lo, hi + 1, (n, k)).astype(np.int32)
+    packed = np.asarray(pack_key_columns(jnp.asarray(cols), lo, hi))
+    assert packed.shape == (n, packed_width(k, lo, hi))
+    assert packed.max(initial=0) < np.iinfo(np.int32).max
+    o1 = np.lexsort(tuple(cols[:, c] for c in range(k - 1, -1, -1)))
+    o2 = np.lexsort(tuple(packed[:, c]
+                          for c in range(packed.shape[1] - 1, -1, -1)))
+    assert [tuple(cols[i]) for i in o1] == [tuple(cols[i]) for i in o2]
+    for i in range(min(n, 8)):
+        for j in range(min(n, 8)):
+            assert (tuple(cols[i]) == tuple(cols[j])) == \
+                (tuple(packed[i]) == tuple(packed[j]))
+
+
+@given(st.integers(0, 100_000), st.integers(1, 12))
+@settings(max_examples=60, deadline=None)
+def test_quantize_sigma_preserves_packed_width(sigma, k):
+    """Quantisation keeps the packed layout identical (same bit width, so
+    same lane count), never shrinks the value range, and is idempotent —
+    the properties that make it a sound static-arg key."""
+    q = quantize_sigma(sigma)
+    assert q >= sigma
+    assert quantize_sigma(q) == q
+    assert (sigma + 1).bit_length() == (q + 1).bit_length()
+    assert packed_width(k, -1, sigma) == packed_width(k, -1, q)
+
+
+def test_resolve_bsp_sort_impl():
+    assert resolve_bsp_sort_impl("auto") == "radix"
+    assert resolve_bsp_sort_impl("auto", pack_keys=False) == "lax"
+    assert resolve_bsp_sort_impl("bitonic") == "bitonic"
+    assert resolve_bsp_sort_impl("lax", pack_keys=True) == "lax"
+    for bad in ("pallas", "nope"):
+        try:
+            resolve_bsp_sort_impl(bad)
+            raise AssertionError(f"{bad} accepted")
+        except ValueError:
+            pass
 
 
 @given(st.integers(1, 50), st.integers(1, 12), st.integers(0, 99))
