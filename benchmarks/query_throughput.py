@@ -1,0 +1,119 @@
+"""Batched query throughput: patterns/sec vs batch size × pattern length.
+
+The build benchmarks (`sa_throughput`, `bsp_throughput`) record how fast
+an index is *constructed*; this one records how fast it *answers* — the
+serving-side number the query engine exists for. For each (batch, m)
+cell the batched jitted path (`SuffixArrayIndex.count_batch`, one XLA
+call per batch) is timed warm against a fixed pattern set, next to the
+scalar-loop regression row (`_sa_range`, the pre-batch Python bisection
+path — the *before* of this rework, exactly like `jax[bitonic]` in
+`BENCH_sa_throughput.json`). Each batched record carries its speedup
+over the scalar loop at the same (n, batch, m).
+
+Patterns are half planted (cut from the text — realistic hit traffic)
+and half random over the same alphabet, so both paths do real compare
+work instead of early-outing on absent first characters.
+
+    PYTHONPATH=src python -m benchmarks.query_throughput [--smoke] [--out PATH]
+"""
+import argparse
+import json
+import platform
+import sys
+
+import numpy as np
+
+from repro.api import SAOptions, SuffixArrayIndex, clear_query_cache
+
+from .bench_util import emit, time_call
+
+N = 200_000
+BATCHES = (1, 16, 64, 256)
+PATTERN_LENS = (8, 32)
+#: the scalar loop is O(batch) Python iterations — cap the row so the
+#: regression stays measurable without dominating the harness run.
+SCALAR_MAX_BATCH = 256
+
+
+def make_patterns(rng, text, batch: int, m: int) -> list:
+    pats = []
+    for q in range(batch):
+        if q % 2 == 0:
+            at = int(rng.integers(0, len(text) - m))
+            pats.append(text[at:at + m])
+        else:
+            pats.append(rng.integers(0, int(text.max()) + 1, size=m))
+    return pats
+
+
+def scalar_counts(index, patterns) -> np.ndarray:
+    """The pre-batch path: one Python binary-search loop per pattern."""
+    out = np.empty(len(patterns), np.int64)
+    for i, p in enumerate(patterns):
+        lo, hi = index._sa_range(index._encode_pattern(p))
+        out[i] = hi - lo
+    return out
+
+
+def record(records, label, n, batch, m, us, **extra):
+    pps = batch / us * 1e6
+    emit(f"query_throughput/{label}/n={n}/b={batch}/m={m}", us,
+         f"patterns_s={pps:.0f}")
+    records.append({"path": label, "n": n, "batch": batch, "m": m,
+                    "us": round(us, 1), "patterns_per_s": round(pps, 1),
+                    **extra})
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_query_throughput.json",
+                    help="JSON artifact path ('' disables)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small n, two batch sizes (CI gate: proves the "
+                         "batched path runs and matches the scalar loop)")
+    args = ap.parse_args(argv)
+
+    n = 20_000 if args.smoke else N
+    batches = (1, 64) if args.smoke else BATCHES
+    lens = (16,) if args.smoke else PATTERN_LENS
+    iters = 1 if args.smoke else 3
+
+    rng = np.random.default_rng(0)
+    text = rng.integers(0, 256, size=n)
+    index = SuffixArrayIndex.build(text)
+    clear_query_cache()
+    records = []
+    print("# query_throughput: path, n, batch, m, us, patterns/s")
+    for m in lens:
+        for batch in batches:
+            pats = make_patterns(rng, text, batch, m)
+            us_b = time_call(lambda: index.count_batch(pats), iters=iters)
+            scalar_us = None
+            if batch <= SCALAR_MAX_BATCH:
+                want = scalar_counts(index, pats)          # engines agree
+                assert np.array_equal(index.count_batch(pats), want), \
+                    (batch, m)
+                scalar_us = time_call(lambda: scalar_counts(index, pats),
+                                      iters=iters)
+                record(records, "scalar", n, batch, m, scalar_us)
+            speedup = (round(scalar_us / us_b, 2) if scalar_us else None)
+            record(records, "batched", n, batch, m, us_b, speedup=speedup)
+            if speedup:
+                print(f"#   batched speedup at b={batch}, m={m}: {speedup}x")
+
+    if args.out:
+        artifact = {
+            "bench": "query_throughput",
+            "python": sys.version.split()[0],
+            "machine": platform.machine(),
+            "smoke": bool(args.smoke),
+            "records": records,
+        }
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"# wrote {args.out} ({len(records)} records)")
+    return records
+
+
+if __name__ == "__main__":
+    main()

@@ -5,10 +5,12 @@ import traceback
 
 
 def main() -> None:
-    from . import (bsp_throughput, kernels_bench, roofline, sa_throughput,
-                   supersteps, table1_example, table2_covers, table3_rounds)
+    from . import (bsp_throughput, kernels_bench, query_throughput, roofline,
+                   sa_throughput, supersteps, table1_example, table2_covers,
+                   table3_rounds)
     mods = [table1_example, table2_covers, table3_rounds, supersteps,
-            sa_throughput, kernels_bench, roofline, bsp_throughput]
+            sa_throughput, query_throughput, kernels_bench, roofline,
+            bsp_throughput]
     # the harness runs the distributed bench in smoke mode (full n × p grid
     # is a dedicated run: python -m benchmarks.bsp_throughput)
     argv = {bsp_throughput: ["--smoke", "--out", ""]}

@@ -37,7 +37,7 @@ def main():
     for r in st.rounds:
         print(f"  v={r['v']:4d} |D|={r['D']:2d} n={r['n']}")
 
-    # the index answers queries directly (lazy LCP, vectorised search)
+    # the index answers queries directly (lazy LCP, batched jitted search)
     print(f"max repeated substring length: {int(index.lcp.max())}")
     print(f"8-gram stats: {index.ngram_stats(8)}")
     pat = big[1234:1242]
@@ -45,6 +45,11 @@ def main():
     print(f"pattern of len {len(pat)} occurs {index.count(pat)}× "
           f"(first at {hits[0] if len(hits) else '-'})")
     assert 1234 in hits
+
+    # many patterns resolve in ONE device call (see examples/query_service.py
+    # for the full serving loop with a persistent IndexStore)
+    batch = [big[10:18], big[500:503], big[99_000:99_032]]
+    print(f"batched counts: {index.count_batch(batch).tolist()}")
 
     # multi-document corpora keep the sentinel-separator layout
     docs = [rng.integers(0, 4, 500) for _ in range(3)]

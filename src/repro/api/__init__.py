@@ -43,11 +43,23 @@ Three layers
    (`builder_cache_stats` / `clear_builder_cache` expose it).
 
 3. **Index** (`SuffixArrayIndex`): text + SA + lazily-computed LCP with
-   queries — `count` / `locate` (vectorised binary search),
-   `ngram_stats(k)`, `duplicate_spans(min_len)`,
+   queries — `count_batch` / `locate_batch` / `contains_batch` (the
+   batched jitted query engine, `repro.api.query`), scalar `count` /
+   `locate` shims, `ngram_stats(k)`, `duplicate_spans(min_len)`,
    `cross_doc_duplicates(min_len)`. `SuffixArrayIndex.from_docs` keeps the
    sentinel-separator corpus layout previously hand-rolled in
    `repro.text.corpus_sa` (now a deprecation shim over this class).
+
+4. **Query engine + store** (`query`, `store`): `QueryBatch` pads and
+   bucketizes many patterns into one device buffer and a single jitted
+   vectorised binary search resolves every `(lo, hi)` SA range in one
+   XLA call (`query_cache_stats` mirrors `builder_cache_stats` on the
+   query side); `QuerySession` serves batched ticks with p50/p95/p99
+   latency accounting; `IndexStore` persists built indexes through the
+   committed-checkpoint machinery (`repro.ckpt.checkpoint`) with
+   staleness detection, so a serving process restores in milliseconds
+   instead of rebuilding (`SuffixArrayIndex.save` / `.load` are the
+   single-artifact conveniences).
 
 Quickstart
 ----------
@@ -64,8 +76,12 @@ from .build import (build_suffix_array, builder_cache_stats,
                     clear_builder_cache)
 from .index import NgramStats, SuffixArrayIndex, encode_docs
 from .options import SAOptions, SCHEDULES, SORT_IMPLS
+from .query import (QueryBatch, QuerySession, clear_query_cache,
+                    query_cache_stats)
 from .registry import (SuffixArrayBuilder, get_backend, register_backend,
                        registered_backends)
+from .store import (IndexStore, StaleIndexError, corpus_fingerprint,
+                    load_index, save_index)
 
 __all__ = [
     "SAOptions",
@@ -74,11 +90,20 @@ __all__ = [
     "SuffixArrayBuilder",
     "SuffixArrayIndex",
     "NgramStats",
+    "IndexStore",
+    "QueryBatch",
+    "QuerySession",
+    "StaleIndexError",
     "build_suffix_array",
     "builder_cache_stats",
     "clear_builder_cache",
+    "clear_query_cache",
+    "corpus_fingerprint",
     "encode_docs",
     "get_backend",
+    "load_index",
+    "query_cache_stats",
     "register_backend",
     "registered_backends",
+    "save_index",
 ]

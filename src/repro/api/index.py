@@ -9,12 +9,25 @@ One object subsumes the previous loose functions (`corpus_sa.CorpusSA`,
   the sentinel-separator layout (doc i is terminated by a unique separator
   of value i placed BELOW the shifted data alphabet, so no suffix comparison
   ever crosses a document boundary);
-* `count` / `locate` — binary search where every probe is one vectorised
-  numpy prefix comparison (no Python per-character loop);
+* `count_batch` / `locate_batch` / `contains_batch` — the query engine:
+  many patterns padded into one device buffer, all SA ranges resolved by
+  a single jitted vectorised binary search (`repro.api.query`);
+* `count` / `locate` — scalar conveniences, thin shims over a batch of
+  one (the legacy numpy bisection loop survives as `_sa_range`, the
+  reference/regression path);
 * `ngram_stats(k)` — total and distinct k-grams fully inside documents;
 * `duplicate_spans(min_len)` — merged repeated-substring spans (the Lee et
   al. 2022 dedup criterion);
-* `cross_doc_duplicates(min_len)` — vectorised contamination check.
+* `cross_doc_duplicates(min_len)` — vectorised contamination check;
+* `save` / `load` — persistence through `repro.api.store` (an
+  `IndexStore` adds naming, staleness checks, and get-or-build on top).
+
+Pattern semantics are explicit: values must lie in ``[0, sigma)`` (the
+index's data alphabet — inferred from the text or declared via
+``sigma=``); out-of-alphabet values raise `ValueError` instead of
+silently never matching. The empty pattern is a prefix of every suffix,
+so ``count([]) == n``; `locate([])` raises `ValueError` (n positions is
+a result you enumerate with `numpy.arange`, not a locate call).
 
 The LCP array is computed lazily on first use and cached.
 """
@@ -27,6 +40,7 @@ import numpy as np
 from ..text.lcp import lcp_kasai, repeated_substring_spans
 from .build import build_suffix_array
 from .options import SAOptions
+from .query import QueryBatch, batch_ranges
 
 
 def encode_docs(docs) -> tuple[np.ndarray, np.ndarray, int]:
@@ -74,7 +88,8 @@ class SuffixArrayIndex:
     """
 
     def __init__(self, text, sa, *, doc_starts=None, shift: int = 0,
-                 options: SAOptions | None = None, lcp=None):
+                 options: SAOptions | None = None, lcp=None,
+                 sigma: int | None = None):
         self.text = np.asarray(text, np.int64)
         self.sa = np.asarray(sa, np.int32)
         if self.sa.shape != self.text.shape:
@@ -87,33 +102,54 @@ class SuffixArrayIndex:
         self.shift = int(shift)
         self.options = options if options is not None else SAOptions()
         self._lcp = None if lcp is None else np.asarray(lcp, np.int64)
+        self._sigma = None if sigma is None else int(sigma)
+        self._device = None        # lazy (text, sa) device buffers
 
     # ----------------------------------------------------------- construct
     @classmethod
-    def build(cls, text, options: SAOptions | None = None,
-              **overrides) -> "SuffixArrayIndex":
+    def build(cls, text, options: SAOptions | None = None, *,
+              sigma: int | None = None, **overrides) -> "SuffixArrayIndex":
         """Index a single document (no separators, positions = raw offsets).
 
         Construction goes through `build_suffix_array`, so it benefits from
         the compiled-builder cache: indexing many similar-length documents
-        under one plan reuses all jitted computations (see docs/api.md)."""
+        under one plan reuses all jitted computations (see docs/api.md).
+        Pass ``sigma=`` to declare the alphabet size explicitly (pattern
+        validation otherwise infers it from the text's maximum value)."""
         opts = options if options is not None else SAOptions()
         if overrides:
             opts = opts.replace(**overrides)
         text = np.asarray(text, np.int64)
         sa = build_suffix_array(text, opts)
-        return cls(text, sa, shift=0, options=opts)
+        return cls(text, sa, shift=0, options=opts, sigma=sigma)
 
     @classmethod
-    def from_docs(cls, docs, options: SAOptions | None = None,
-                  **overrides) -> "SuffixArrayIndex":
+    def from_docs(cls, docs, options: SAOptions | None = None, *,
+                  sigma: int | None = None, **overrides) -> "SuffixArrayIndex":
         """Index a list of documents with the sentinel-separator layout."""
         opts = options if options is not None else SAOptions()
         if overrides:
             opts = opts.replace(**overrides)
         text, starts, n_docs = encode_docs(docs)
         sa = build_suffix_array(text, opts)
-        return cls(text, sa, doc_starts=starts, shift=n_docs, options=opts)
+        return cls(text, sa, doc_starts=starts, shift=n_docs, options=opts,
+                   sigma=sigma)
+
+    # --------------------------------------------------------- persistence
+    def save(self, path: str) -> str:
+        """Persist this index at `path` (`repro.api.store.save_index`)."""
+        from .store import save_index
+        return save_index(path, self)
+
+    @classmethod
+    def load(cls, path: str, *, options: SAOptions | None = None
+             ) -> "SuffixArrayIndex":
+        """Restore an index saved by `save` — no rebuild, no LCP recompute.
+
+        Pass ``options`` to reject an artifact whose construction plan
+        fingerprint differs (`repro.api.store.StaleIndexError`)."""
+        from .store import load_index
+        return load_index(path, options=options)
 
     # ----------------------------------------------------------- structure
     @property
@@ -127,6 +163,17 @@ class SuffixArrayIndex:
     @property
     def sep_count(self) -> int:
         return self.shift          # one separator per document when encoded
+
+    @property
+    def sigma(self) -> int:
+        """Data-alphabet size: patterns must use values in [0, sigma).
+
+        Inferred as ``max data value + 1`` unless declared at construction
+        (``sigma=``); 0 for an index with no data characters."""
+        if self._sigma is None:
+            data_max = int(self.text.max()) - self.shift if self.n else -1
+            self._sigma = max(data_max + 1, 0)
+        return self._sigma
 
     @property
     def lcp(self) -> np.ndarray:
@@ -166,10 +213,38 @@ class SuffixArrayIndex:
 
     # ------------------------------------------------------------- queries
     def _encode_pattern(self, pattern) -> np.ndarray:
+        """Validate + shift a raw pattern into the encoded alphabet.
+
+        Values must lie in ``[0, sigma)``: negatives always raise, and
+        values ≥ sigma raise too (they can never occur in the data, so a
+        silent 0-count would hide caller bugs — and before this check an
+        out-of-range token could alias a separator after the shift). The
+        alphabet check is skipped on an empty index (sigma is vacuously 0
+        there; every count is 0 anyway).
+        """
         pat = np.asarray(pattern, np.int64).ravel()
-        if len(pat) and int(pat.min()) < 0:
-            raise ValueError("pattern values must be ≥ 0")
+        if len(pat):
+            if int(pat.min()) < 0:
+                raise ValueError("pattern values must be ≥ 0")
+            if self.n and int(pat.max()) >= self.sigma:
+                raise ValueError(
+                    f"pattern value {int(pat.max())} outside the index "
+                    f"alphabet [0, {self.sigma}) — out-of-alphabet queries "
+                    f"are rejected rather than silently counted as 0")
         return pat + self.shift
+
+    def _device_state(self):
+        """Device-resident (text, sa) buffers for the batched query kernel,
+        created on first use and cached for the life of the index."""
+        if self._device is None:
+            import jax.numpy as jnp
+            if self.n and int(self.text.max()) >= np.iinfo(np.int32).max:
+                raise NotImplementedError(
+                    "batched queries need int32-representable symbols "
+                    f"(max encoded value {int(self.text.max())})")
+            self._device = (jnp.asarray(self.text.astype(np.int32)),
+                            jnp.asarray(self.sa))
+        return self._device
 
     def _suffix_cmp(self, starts: np.ndarray, pat: np.ndarray) -> np.ndarray:
         """Vectorised 3-way prefix compare of suffixes at `starts` vs `pat`:
@@ -198,8 +273,13 @@ class SuffixArrayIndex:
 
     def _sa_range(self, pat: np.ndarray) -> tuple[int, int]:
         """[lo, hi) block of SA ranks whose suffixes start with `pat`.
-        Both binary-search bounds advance together; every probe is one
-        vectorised `_suffix_cmp` call → O(|pat| log n) numpy work total."""
+
+        The *scalar reference* search: a Python binary-search loop where
+        every probe is one vectorised `_suffix_cmp` call → O(|pat| log n)
+        numpy work per pattern. Serving traffic goes through the batched
+        jitted path instead (`sa_ranges_batch`); this loop is kept as the
+        equivalence oracle for `tests/api/test_query.py` and the
+        regression row of `benchmarks/query_throughput.py`."""
         n = len(self.sa)
         if len(pat) == 0:
             return 0, n
@@ -217,21 +297,55 @@ class SuffixArrayIndex:
             hi = np.where(active & ~before, mid, hi)
         return int(lo[0]), int(lo[1])
 
-    def count(self, pattern) -> int:
-        """Occurrences of `pattern` across the corpus — O(m log n)."""
-        pat = self._encode_pattern(pattern)
-        if len(pat) == 0 or len(pat) > self.n:
-            return 0
-        lo, hi = self._sa_range(pat)
+    # ------------------------------------------------------ batched queries
+    def _as_batch(self, patterns) -> QueryBatch:
+        return (patterns if isinstance(patterns, QueryBatch)
+                else QueryBatch.encode(self, patterns))
+
+    def sa_ranges_batch(self, patterns) -> tuple[np.ndarray, np.ndarray]:
+        """`[lo, hi)` SA-rank ranges for many patterns in ONE device call.
+
+        `patterns` is a sequence of int sequences (mixed lengths fine) or
+        a pre-encoded `QueryBatch` for reuse. Returns two int64 arrays of
+        length `len(patterns)`. Empty patterns resolve to (0, n); patterns
+        longer than the text to an empty range."""
+        return batch_ranges(self, self._as_batch(patterns))
+
+    def count_batch(self, patterns) -> np.ndarray:
+        """Occurrence counts for many patterns — int64[len(patterns)],
+        resolved by one jitted vectorised binary search. The empty pattern
+        is a prefix of every suffix, so it counts n."""
+        lo, hi = self.sa_ranges_batch(patterns)
         return hi - lo
 
+    def contains_batch(self, patterns) -> np.ndarray:
+        """Presence flags for many patterns — bool[len(patterns)]."""
+        return self.count_batch(patterns) > 0
+
+    def locate_batch(self, patterns) -> list:
+        """Sorted encoded start positions per pattern — a list of int64
+        arrays. Raises `ValueError` on an empty pattern (its result is
+        "every position"; enumerate that with `numpy.arange(n)`)."""
+        qb = self._as_batch(patterns)
+        if self.n and np.any(qb.lens[:qb.n_queries] == 0):
+            raise ValueError("locate of an empty pattern is every position "
+                             "in the index; use numpy.arange(n) instead")
+        lo, hi = batch_ranges(self, qb)
+        return [np.sort(self.sa[l:h].astype(np.int64))
+                for l, h in zip(lo, hi)]
+
+    # ----------------------------------------------------- scalar shims
+    def count(self, pattern) -> int:
+        """Occurrences of `pattern` across the corpus.
+
+        Thin shim over a batch of one (`count_batch`); `count([]) == n`
+        by the empty-prefix rule."""
+        return int(self.count_batch([pattern])[0])
+
     def locate(self, pattern) -> np.ndarray:
-        """Sorted encoded start positions of every occurrence of `pattern`."""
-        pat = self._encode_pattern(pattern)
-        if len(pat) == 0 or len(pat) > self.n:
-            return np.zeros(0, np.int64)
-        lo, hi = self._sa_range(pat)
-        return np.sort(self.sa[lo:hi].astype(np.int64))
+        """Sorted encoded start positions of every occurrence of `pattern`.
+        Thin shim over a batch of one (`locate_batch`)."""
+        return self.locate_batch([pattern])[0]
 
     def locate_docs(self, pattern) -> np.ndarray:
         """Occurrences as an int64[k, 2] array of (doc, in-doc offset)."""

@@ -115,5 +115,25 @@ class SAOptions:
             return self.backend
         return "bsp" if self.mesh is not None else "jax"
 
+    def fingerprint(self) -> str:
+        """Stable identity of the construction plan, for staleness checks.
+
+        Covers the fields that *describe* the build (backend spelling, v0,
+        schedule, base_threshold, sort_impl, pack_keys) and deliberately
+        excludes runtime objects (mesh, counters/stats sinks) and
+        execution-only knobs (cache, validate): every correct backend
+        produces the identical suffix array, so a persisted index
+        (`repro.api.store.IndexStore`) stays valid across process
+        restarts, device counts, and instrumentation changes — but is
+        conservatively rebuilt when the plan itself changes. Callable
+        schedules fingerprint by name: two differently-named callables
+        never match, same-named ones are trusted to agree.
+        """
+        sched = (self.schedule if isinstance(self.schedule, str)
+                 else f"callable:{getattr(self.schedule, '__name__', 'anon')}")
+        return (f"plan-v1|backend={self.backend}|v0={self.v0}"
+                f"|schedule={sched}|base={self.base_threshold}"
+                f"|sort={self.sort_impl}|pack={int(self.pack_keys)}")
+
     def replace(self, **changes) -> "SAOptions":
         return dataclasses.replace(self, **changes)

@@ -1,0 +1,312 @@
+"""Batched query execution — many patterns, one XLA call.
+
+The scalar query path (`SuffixArrayIndex._sa_range`) answers one pattern
+at a time with a Python binary-search loop: O(log n) numpy probes per
+pattern, each a host gather + compare. That is fine for a notebook and
+hopeless for a serving process. This module is the batched replacement:
+
+* `QueryBatch` encodes many patterns into ONE padded device buffer
+  (`int[B_pad, L_pad]` + per-row lengths), with both axes quantised onto a
+  power-of-two bucket grid so repeated batch shapes reuse the same jitted
+  computation — the same shape-quantisation idea as the compiled-builder
+  cache in `repro.api.build` (`pad_bucket`), applied to the query side.
+* `batch_ranges` runs a single jitted **vectorised double binary search**
+  (`_ranges_kernel`): all B patterns advance their (lower, upper) SA
+  bounds in lock-step; every step is one `[B, 2, L]` gather of text
+  windows and one masked prefix comparison. All `(lo, hi)` SA ranges
+  resolve in one XLA call — O(B · L · log n) device work, zero Python
+  per-probe overhead.
+* `QuerySession` is the serving facade: it chops an incoming pattern
+  stream into fixed-size ticks, runs each tick through the batched path,
+  and keeps per-tick latency records (`latency_summary()` reports
+  p50/p95/p99 and qps) — what `repro.launch.serve` prints.
+
+Observability mirrors `repro.core.dcv_jax`: `TRACE_COUNTS` records one
+event per actual kernel trace (the no-retrace tests in
+`tests/api/test_query.py` assert it stays flat for re-used buckets), and
+`query_cache_stats()` counts bucket hits/misses the way
+`builder_cache_stats()` does for builds.
+"""
+from __future__ import annotations
+
+import collections
+import time
+import weakref
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: one event per actual jax trace of the query kernel (keyed by shape).
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+#: (n, B_pad, L_pad, text dtype) buckets seen so far + hit/miss counters.
+_SEEN_BUCKETS: set[tuple] = set()
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+#: pattern-length buckets never go below this (tiny patterns share shapes).
+_MIN_LEN_BUCKET = 8
+
+
+def trace_events() -> int:
+    """Total number of jax traces performed by the query kernel so far."""
+    return sum(TRACE_COUNTS.values())
+
+
+def query_cache_stats() -> dict:
+    """Snapshot of the query-plan cache: buckets / hits / misses.
+
+    A "bucket" is one compiled kernel shape `(n, B_pad, L_pad, dtype)`;
+    a hit means the batch landed on a shape that was already compiled.
+    """
+    return {"buckets": len(_SEEN_BUCKETS), **_CACHE_STATS}
+
+
+def clear_query_cache() -> None:
+    """Reset the bucket bookkeeping and hit/miss counters.
+
+    Does not drop jax's jit cache — batches re-run after a clear still
+    reuse compiled kernels when shapes match (exactly like
+    `repro.api.build.clear_builder_cache`).
+    """
+    _SEEN_BUCKETS.clear()
+    _CACHE_STATS["hits"] = 0
+    _CACHE_STATS["misses"] = 0
+
+
+def _pow2_bucket(m: int, floor: int = 1) -> int:
+    """Smallest power of two ≥ max(m, floor)."""
+    m = max(int(m), floor, 1)
+    return 1 << (m - 1).bit_length()
+
+
+class QueryBatch:
+    """Many encoded patterns in one padded, bucketed device-ready buffer.
+
+    Rows are patterns *after* `SuffixArrayIndex._encode_pattern` (shift
+    applied, alphabet validated); `lens[i]` is the true length of row i and
+    columns past it are padding (masked inside the kernel, value
+    irrelevant). Both axes are padded up to power-of-two buckets
+    (`L` has a floor of 8) so nearby batch shapes share one compiled
+    kernel; padded rows have length 0 and are sliced off the results.
+
+    A `QueryBatch` is **bound to the index that encoded it** (the
+    shift/sigma are baked into the values) and that binding is enforced:
+    running it against any other index raises `ValueError` instead of
+    silently searching mis-encoded values. Within its index it is
+    reusable — passing the same batch to `count_batch`/`locate_batch`
+    repeatedly skips re-encoding.
+    """
+
+    __slots__ = ("pats", "lens", "n_queries", "_index_ref")
+
+    def __init__(self, pats: np.ndarray, lens: np.ndarray, n_queries: int,
+                 index=None):
+        self.pats = pats            # int[B_pad, L_pad], encoded + padded
+        self.lens = lens            # int32[B_pad], 0 for padding rows
+        self.n_queries = int(n_queries)
+        self._index_ref = (weakref.ref(index) if index is not None
+                           else lambda: None)
+
+    def check_bound_to(self, index) -> None:
+        """Raise unless this batch was encoded by `index` (the encoding
+        shift/sigma are index-specific — a foreign batch would return
+        wrong counts, not an error, without this check)."""
+        if self._index_ref() is not index:
+            raise ValueError(
+                "QueryBatch was encoded against a different index (or one "
+                "that no longer exists) — re-encode with "
+                "QueryBatch.encode(index, patterns)")
+
+    @classmethod
+    def encode(cls, index, patterns, dtype=np.int32) -> "QueryBatch":
+        """Encode `patterns` (a sequence of int sequences) against `index`."""
+        enc = [index._encode_pattern(p) for p in patterns]
+        B = len(enc)
+        max_len = max((len(p) for p in enc), default=0)
+        b_pad = _pow2_bucket(B)
+        l_pad = _pow2_bucket(max_len, floor=_MIN_LEN_BUCKET)
+        pats = np.zeros((b_pad, l_pad), dtype)
+        lens = np.zeros(b_pad, np.int32)
+        cap = np.iinfo(dtype).max
+        for i, p in enumerate(enc):
+            if len(p) and int(p.max()) >= cap:
+                # a declared sigma may admit values past int32; every text
+                # symbol is < cap (enforced by _device_state), so clamping
+                # to cap preserves every text-vs-pattern comparison exactly
+                # instead of wrapping to a false match.
+                p = np.minimum(p, cap)
+            pats[i, :len(p)] = p
+            lens[i] = len(p)
+        return cls(pats, lens, B, index=index)
+
+    @property
+    def bucket(self) -> tuple[int, int]:
+        """(B_pad, L_pad) — the compiled shape this batch runs at."""
+        return tuple(self.pats.shape)
+
+    def __len__(self) -> int:
+        return self.n_queries
+
+    def __repr__(self) -> str:
+        return (f"QueryBatch(n_queries={self.n_queries}, "
+                f"bucket={self.bucket})")
+
+
+@jax.jit
+def _ranges_kernel(text, sa, pats, lens):
+    """Vectorised double binary search: all patterns, both bounds, at once.
+
+    For each pattern row the kernel maintains two binary-search states over
+    SA ranks — bound 0 converges to the first suffix ≥ pattern, bound 1 to
+    the first suffix > pattern (prefix-match counts as equal), so
+    `[lo, hi)` is exactly the block of suffixes starting with the pattern.
+    Every iteration probes both bounds of every pattern with one gather of
+    `[B, 2, L]` text windows and one masked 3-way prefix comparison
+    (past-the-end reads as -1, below every real character; columns ≥ the
+    pattern's true length are masked out). Rows with length 0 (empty or
+    padding) resolve to (0, n). The iteration count is ceil(log2(n + 1)),
+    a shape-derived Python int, so the whole search is one fori_loop in
+    one XLA computation.
+    """
+    TRACE_COUNTS["ranges_kernel"] += 1
+    n = text.shape[0]
+    B, L = pats.shape
+    steps = max(int(n).bit_length(), 1) + 1
+    col = jnp.arange(L, dtype=jnp.int32)
+    past_end = jnp.array(-1, text.dtype)   # below every real character
+
+    def body(_, state):
+        lo, hi = state
+        active = lo < hi                                    # [B, 2]
+        mid = lo + (hi - lo) // 2    # lo+hi could wrap int32 for n > 2^30
+        start = sa[jnp.where(active, mid, 0)]               # [B, 2]
+        idx = start[..., None] + col[None, None, :]         # [B, 2, L]
+        chars = jnp.where(idx < n, text[jnp.minimum(idx, n - 1)], past_end)
+        pat = jnp.broadcast_to(pats[:, None, :], chars.shape)
+        valid = col[None, None, :] < lens[:, None, None]
+        diff = (chars != pat) & valid
+        any_diff = diff.any(axis=-1)
+        first = jnp.argmax(diff, axis=-1)[..., None]
+        s_at = jnp.take_along_axis(chars, first, axis=-1)[..., 0]
+        p_at = jnp.take_along_axis(pat, first, axis=-1)[..., 0]
+        less = any_diff & (s_at < p_at)       # suffix < pattern
+        greater = any_diff & (s_at > p_at)    # suffix > pattern
+        # bound 0 moves right while suffix < pat; bound 1 while suffix ≤ pat
+        before = jnp.stack([less[:, 0], ~greater[:, 1]], axis=1)
+        lo = jnp.where(active & before, mid + 1, lo)
+        hi = jnp.where(active & ~before, mid, hi)
+        return lo, hi
+
+    lo0 = jnp.zeros((B, 2), jnp.int32)
+    hi0 = jnp.full((B, 2), n, jnp.int32)
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo0, hi0))
+    return lo[:, 0], lo[:, 1]
+
+
+def batch_ranges(index, batch: QueryBatch) -> tuple[np.ndarray, np.ndarray]:
+    """Resolve every pattern in `batch` to its `[lo, hi)` SA-rank range.
+
+    One jitted call for the whole batch; returns two int64[n_queries]
+    arrays (padding rows already sliced off). An empty index maps every
+    pattern to the empty range (0, 0).
+    """
+    batch.check_bound_to(index)
+    k = batch.n_queries
+    if index.n == 0 or k == 0:
+        z = np.zeros(k, np.int64)
+        return z, z.copy()
+    text_d, sa_d = index._device_state()
+    key = (index.n, *batch.bucket, np.dtype(batch.pats.dtype).str)
+    if key in _SEEN_BUCKETS:
+        _CACHE_STATS["hits"] += 1
+    else:
+        _CACHE_STATS["misses"] += 1
+        _SEEN_BUCKETS.add(key)
+    lo, hi = _ranges_kernel(text_d, sa_d, jnp.asarray(batch.pats),
+                            jnp.asarray(batch.lens))
+    return (np.asarray(lo)[:k].astype(np.int64),
+            np.asarray(hi)[:k].astype(np.int64))
+
+
+class QuerySession:
+    """Serving facade: batched query ticks + latency accounting.
+
+    Wraps one `SuffixArrayIndex` (built locally or restored from an
+    `IndexStore`) and exposes the batch API in serving shape: an incoming
+    sequence of patterns is chopped into ticks of at most `batch_size`,
+    each tick runs through the jitted batched path as one device call, and
+    the wall time of every tick is recorded. `latency_summary()` reports
+    per-query p50/p95/p99 latency (a query's latency is its tick's wall
+    time — queries in one tick complete together) plus aggregate qps.
+    """
+
+    def __init__(self, index, *, batch_size: int = 64):
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be ≥ 1, got {batch_size}")
+        self.index = index
+        self.batch_size = int(batch_size)
+        self._tick_us: list[float] = []     # wall µs per tick
+        self._tick_sizes: list[int] = []    # queries per tick
+
+    # ------------------------------------------------------------ serving
+    def _ticks(self, patterns):
+        pats = list(patterns)
+        for at in range(0, len(pats), self.batch_size):
+            yield pats[at:at + self.batch_size]
+
+    def _timed(self, fn, tick):
+        t0 = time.perf_counter()
+        out = fn(tick)
+        self._tick_us.append(1e6 * (time.perf_counter() - t0))
+        self._tick_sizes.append(len(tick))
+        return out
+
+    def count(self, patterns) -> np.ndarray:
+        """Occurrence counts for a stream of patterns — int64[len]."""
+        outs = [self._timed(self.index.count_batch, t)
+                for t in self._ticks(patterns)]
+        return (np.concatenate(outs) if outs else np.zeros(0, np.int64))
+
+    def contains(self, patterns) -> np.ndarray:
+        """Presence flags for a stream of patterns — bool[len]."""
+        return self.count(patterns) > 0
+
+    def locate(self, patterns) -> list:
+        """Sorted occurrence positions per pattern — list of int64 arrays."""
+        outs: list = []
+        for t in self._ticks(patterns):
+            outs.extend(self._timed(self.index.locate_batch, t))
+        return outs
+
+    # --------------------------------------------------------- accounting
+    @property
+    def queries_served(self) -> int:
+        return int(sum(self._tick_sizes))
+
+    def latency_summary(self) -> dict:
+        """Aggregate latency stats over every tick served so far."""
+        if not self._tick_us:
+            return {"ticks": 0, "queries": 0, "p50_us": 0.0, "p95_us": 0.0,
+                    "p99_us": 0.0, "qps": 0.0}
+        per_query = np.repeat(np.asarray(self._tick_us),
+                              np.asarray(self._tick_sizes))
+        p50, p95, p99 = np.percentile(per_query, [50, 95, 99])
+        total_s = float(np.sum(self._tick_us)) * 1e-6
+        return {
+            "ticks": len(self._tick_us),
+            "queries": self.queries_served,
+            "p50_us": float(p50),
+            "p95_us": float(p95),
+            "p99_us": float(p99),
+            "qps": self.queries_served / max(total_s, 1e-9),
+        }
+
+    def reset_latency(self) -> None:
+        self._tick_us.clear()
+        self._tick_sizes.clear()
+
+    def __repr__(self) -> str:
+        return (f"QuerySession(index=n{self.index.n}, "
+                f"batch_size={self.batch_size}, "
+                f"served={self.queries_served})")

@@ -1,0 +1,283 @@
+"""`IndexStore` — persist built suffix-array indexes; restore, don't rebuild.
+
+Construction cost is the whole point of the paper; paying it once and
+amortising it across query workloads is the whole point of an index
+service. This module turns a built `SuffixArrayIndex` into a durable,
+versioned artifact on disk so a serving process restarts into a warm
+index instead of re-running the builder.
+
+Format — one directory per named entry, written through the committed
+checkpoint machinery in `repro.ckpt.checkpoint` (atomic rename + a
+`COMMITTED` marker, so a crashed writer never leaves a half-visible
+index)::
+
+    <root>/<name>/step_00000000/
+        arrays.npz       — text, sa, doc_starts (+ lcp when it was cached)
+        manifest.json    — leaf shapes/dtypes + the index manifest extras
+        COMMITTED
+
+The manifest extras carry everything needed to trust a restore:
+
+* ``format`` — `FORMAT_VERSION`; bumped on layout changes, old entries
+  load as stale rather than as garbage;
+* ``options_fingerprint`` — `SAOptions.fingerprint()` of the plan that
+  built the index (construction fields only; see that docstring);
+* ``corpus_sha256`` — content hash of the encoded text, so a store entry
+  built from yesterday's corpus never silently serves today's queries;
+* ``shift`` / ``sigma`` / ``n`` / ``n_docs`` / ``has_lcp`` — the index
+  structure, restored without recomputation (the lazy LCP stays lazy if
+  it was never computed before saving).
+
+Staleness is an *error type*, not a boolean: `load_index` raises
+`StaleIndexError` describing exactly which check failed, and
+`IndexStore.get_or_build` catches it (and `FileNotFoundError`) to fall
+back to a fresh build + save, reporting ``"hit" | "miss" | "stale"`` the
+way `repro.api.build.builder_cache_stats` reports builder-cache traffic.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+from typing import Callable
+
+import numpy as np
+
+from ..ckpt.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from .index import SuffixArrayIndex
+from .options import SAOptions
+
+#: bump when the on-disk layout or manifest fields change incompatibly.
+FORMAT_VERSION = 1
+
+_KIND = "suffix-array-index"
+
+
+class StaleIndexError(RuntimeError):
+    """A persisted index exists but no longer matches what was asked for
+    (format version, construction plan, or corpus content)."""
+
+
+def corpus_fingerprint(text) -> str:
+    """Content hash of an encoded text buffer (dtype-normalised sha256).
+
+    This is the store's corpus identity: computing it costs one linear
+    pass, vastly cheaper than the build it may save. `encode_docs` output
+    and `SuffixArrayIndex.text` hash identically for the same corpus.
+    """
+    arr = np.ascontiguousarray(np.asarray(text, np.int64))
+    h = hashlib.sha256()
+    h.update(str(arr.shape).encode())
+    h.update(arr.tobytes())
+    return h.hexdigest()
+
+
+def _index_tree(index: SuffixArrayIndex) -> dict:
+    tree = {"text": index.text, "sa": index.sa,
+            "doc_starts": index.doc_starts}
+    if index._lcp is not None:
+        tree["lcp"] = index._lcp
+    return tree
+
+
+def save_index(path: str, index: SuffixArrayIndex) -> str:
+    """Persist `index` under `path` (one committed step_00000000 entry).
+
+    Returns `path`. The LCP array is included only if it was already
+    computed — saving never forces the Kasai pass.
+    """
+    opts = index.options
+    extras = {
+        "format": FORMAT_VERSION,
+        "kind": _KIND,
+        "n": index.n,
+        "n_docs": index.n_docs,
+        "shift": index.shift,
+        "sigma": index.sigma,
+        "has_lcp": index._lcp is not None,
+        "options_fingerprint": opts.fingerprint(),
+        # the plan fields themselves, so load_index can reconstruct the
+        # SAOptions and a restored index re-saves with the SAME
+        # fingerprint (callable schedules don't round-trip: None here)
+        "plan": {
+            "backend": opts.backend,
+            "v0": opts.v0,
+            "schedule": (opts.schedule if isinstance(opts.schedule, str)
+                         else None),
+            "base_threshold": opts.base_threshold,
+            "sort_impl": opts.sort_impl,
+            "pack_keys": opts.pack_keys,
+        },
+        "corpus_sha256": corpus_fingerprint(index.text),
+        "created_unix": time.time(),
+    }
+    save_checkpoint(path, 0, _index_tree(index), extras=extras)
+    return path
+
+
+def _read_manifest(path: str, step: int) -> dict:
+    mpath = os.path.join(path, f"step_{step:08d}", "manifest.json")
+    try:
+        with open(mpath) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise StaleIndexError(f"unreadable index manifest at {mpath}: {e}")
+
+
+def load_index(path: str, *, options: SAOptions | None = None,
+               expect_corpus_sha: str | None = None) -> SuffixArrayIndex:
+    """Restore a `SuffixArrayIndex` persisted by `save_index`.
+
+    Raises `FileNotFoundError` when no committed entry exists, and
+    `StaleIndexError` when one exists but fails a staleness check:
+    unknown format version, `options.fingerprint()` mismatch (pass
+    ``options`` to enforce the plan), or `expect_corpus_sha` mismatch
+    (pass the current corpus hash to enforce content identity). Leaf
+    shapes/dtypes are validated by `repro.ckpt.checkpoint
+    .restore_checkpoint` against the manifest, so a truncated or
+    hand-edited `arrays.npz` raises instead of restoring garbage.
+    """
+    step = latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no committed index entry under {path!r}")
+    manifest = _read_manifest(path, step)
+    extras = manifest.get("extras", {})
+    if extras.get("kind") != _KIND:
+        raise StaleIndexError(
+            f"{path!r} is not a suffix-array index artifact "
+            f"(kind={extras.get('kind')!r})")
+    if extras.get("format") != FORMAT_VERSION:
+        raise StaleIndexError(
+            f"index at {path!r} has format {extras.get('format')!r}, "
+            f"this code reads {FORMAT_VERSION} — rebuild it")
+    if options is not None:
+        want, got = options.fingerprint(), extras.get("options_fingerprint")
+        if want != got:
+            raise StaleIndexError(
+                f"index at {path!r} was built with plan {got!r}, "
+                f"requested {want!r}")
+    if expect_corpus_sha is not None and \
+            extras.get("corpus_sha256") != expect_corpus_sha:
+        raise StaleIndexError(
+            f"index at {path!r} was built from a different corpus "
+            f"(stored sha {extras.get('corpus_sha256')!r:.24} != expected "
+            f"{expect_corpus_sha!r:.24})")
+
+    # like_tree reconstructed from the manifest itself; flatten order of a
+    # dict is sorted keys, matching the order shapes/dtypes were recorded.
+    keys = ["doc_starts", "sa", "text"] + (["lcp"] if extras.get("has_lcp")
+                                           else [])
+    keys = sorted(keys)
+    shapes, dtypes = manifest.get("shapes", []), manifest.get("dtypes", [])
+    if len(shapes) != len(keys) or len(dtypes) != len(keys):
+        raise StaleIndexError(
+            f"index manifest at {path!r} records {len(shapes)} leaves, "
+            f"expected {len(keys)} ({keys})")
+    like = {k: np.zeros(tuple(s), np.dtype(d))
+            for k, s, d in zip(keys, shapes, dtypes)}
+    tree, extras = restore_checkpoint(path, step, like)
+    # re-attach the construction plan so the restored index re-saves with
+    # the same fingerprint: the caller's options when given (fingerprint
+    # already verified above), else the persisted plan fields
+    if options is not None:
+        opts = options
+    else:
+        plan = dict(extras.get("plan") or {})
+        if plan.get("schedule") is None:
+            # a callable schedule doesn't round-trip: keep every other
+            # plan field (backend/v0/sort_impl/... provenance) and let the
+            # schedule fall back to the default — the SA itself is
+            # schedule-invariant, only the fingerprint's schedule
+            # component is lost
+            plan.pop("schedule", None)
+        opts = SAOptions(**plan) if plan else None
+    return SuffixArrayIndex(
+        tree["text"], tree["sa"], doc_starts=tree["doc_starts"],
+        shift=int(extras["shift"]), sigma=int(extras["sigma"]),
+        options=opts, lcp=tree.get("lcp"))
+
+
+class IndexStore:
+    """Named persistent indexes under one root directory, with traffic
+    stats — the serving-side analogue of the compiled-builder cache.
+
+    >>> store = IndexStore(root)                          # doctest: +SKIP
+    >>> index, status = store.get_or_build(
+    ...     "corpus", lambda: SuffixArrayIndex.from_docs(docs, opts),
+    ...     options=opts)                                 # doctest: +SKIP
+
+    `status` is ``"hit"`` (restored — the build was skipped entirely),
+    ``"miss"`` (no entry yet) or ``"stale"`` (entry failed a staleness
+    check); both non-hits build via `build_fn` and persist the result.
+    """
+
+    def __init__(self, root: str):
+        self.root = str(root)
+        self._stats = {"hits": 0, "misses": 0, "stale": 0}
+
+    def path(self, name: str) -> str:
+        if not name or os.sep in name or name.startswith("."):
+            raise ValueError(f"invalid index entry name {name!r}")
+        return os.path.join(self.root, name)
+
+    def entries(self) -> list[str]:
+        """Names with a committed entry, sorted."""
+        if not os.path.isdir(self.root):
+            return []
+        return sorted(d for d in os.listdir(self.root)
+                      if latest_step(os.path.join(self.root, d)) is not None)
+
+    def save(self, name: str, index: SuffixArrayIndex) -> str:
+        return save_index(self.path(name), index)
+
+    def load(self, name: str, *, options: SAOptions | None = None,
+             expect_corpus_sha: str | None = None) -> SuffixArrayIndex:
+        return load_index(self.path(name), options=options,
+                          expect_corpus_sha=expect_corpus_sha)
+
+    def manifest_age(self, name: str) -> float | None:
+        """Seconds since the entry's manifest was written, or None."""
+        step = latest_step(self.path(name))
+        if step is None:
+            return None
+        mpath = os.path.join(self.path(name), f"step_{step:08d}",
+                             "manifest.json")
+        try:
+            return max(time.time() - os.path.getmtime(mpath), 0.0)
+        except OSError:
+            return None
+
+    def get_or_build(self, name: str,
+                     build_fn: Callable[[], SuffixArrayIndex], *,
+                     options: SAOptions | None = None,
+                     corpus_sha: str | None = None,
+                     ) -> tuple[SuffixArrayIndex, str]:
+        """Restore `name` if fresh, else build, persist, and return.
+
+        Returns ``(index, status)`` with status in {"hit", "miss",
+        "stale"}. On a hit the builder never runs —
+        `repro.api.build.builder_cache_stats` stays at zero builds, which
+        is exactly what the warm-restart test asserts.
+        """
+        try:
+            index = self.load(name, options=options,
+                              expect_corpus_sha=corpus_sha)
+            self._stats["hits"] += 1
+            return index, "hit"
+        except FileNotFoundError:
+            status = "miss"
+            self._stats["misses"] += 1
+        except StaleIndexError:
+            status = "stale"
+            self._stats["stale"] += 1
+        index = build_fn()
+        self.save(name, index)
+        return index, status
+
+    def stats(self) -> dict:
+        """Traffic snapshot: entries on disk + hits/misses/stale so far."""
+        return {"entries": len(self.entries()), **self._stats}
+
+    def __repr__(self) -> str:
+        return f"IndexStore(root={self.root!r}, stats={self.stats()})"

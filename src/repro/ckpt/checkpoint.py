@@ -85,21 +85,71 @@ def restore_checkpoint(ckpt_dir: str, step: int, like_tree, *,
                        shardings=None):
     """Restore into the structure of `like_tree`. With `shardings` (a pytree
     of NamedSharding for a possibly *different* mesh) arrays are device_put
-    shard-by-shard — this is the elastic reshard path."""
+    shard-by-shard — this is the elastic reshard path.
+
+    Every leaf is validated against `like_tree` (count, shape, AND dtype)
+    before unflattening, and the arrays.npz payload is cross-checked
+    against the manifest, so a stale, truncated, or hand-edited checkpoint
+    raises a descriptive `FileNotFoundError`/`ValueError` instead of
+    restoring garbage silently — `repro.api.store.IndexStore` relies on
+    this contract.
+    """
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    assert os.path.exists(os.path.join(path, "COMMITTED")), path
+    if not os.path.exists(os.path.join(path, "COMMITTED")):
+        raise FileNotFoundError(
+            f"no committed checkpoint at {path} (missing COMMITTED marker)")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
     leaves, treedef = jax.tree_util.tree_flatten(like_tree)
-    loaded = [data[str(i)] for i in range(len(leaves))]
-    for want, got in zip(leaves, loaded):
-        assert tuple(want.shape) == tuple(got.shape), \
-            f"shape mismatch {want.shape} vs {got.shape}"
+    names = manifest.get("paths") or []
+
+    def leaf_name(i):
+        return names[i] if i < len(names) else f"leaf {i}"
+
+    if len(data.files) != len(leaves):
+        raise ValueError(
+            f"checkpoint {path} holds {len(data.files)} arrays but "
+            f"like_tree has {len(leaves)} leaves — stale or truncated "
+            f"checkpoint, or a mismatched restore target")
+    m_shapes = manifest.get("shapes")
+    m_dtypes = manifest.get("dtypes")
+    if m_shapes is not None and len(m_shapes) != len(leaves):
+        raise ValueError(
+            f"checkpoint manifest {path} records {len(m_shapes)} leaves "
+            f"but like_tree has {len(leaves)} — stale or truncated manifest")
+    loaded = []
+    for i, want in enumerate(leaves):
+        if str(i) not in data.files:
+            raise ValueError(f"checkpoint {path} is missing array {i} "
+                             f"({leaf_name(i)}) — truncated arrays.npz")
+        got = data[str(i)]
+        want_shape = tuple(np.shape(want))
+        want_dtype = np.dtype(getattr(want, "dtype", np.asarray(want).dtype))
+        if tuple(got.shape) != want_shape:
+            raise ValueError(
+                f"checkpoint {path}, {leaf_name(i)}: stored shape "
+                f"{tuple(got.shape)} != expected {want_shape}")
+        if np.dtype(got.dtype) != want_dtype:
+            raise ValueError(
+                f"checkpoint {path}, {leaf_name(i)}: stored dtype "
+                f"{got.dtype} != expected {want_dtype}")
+        if m_shapes is not None and tuple(m_shapes[i]) != tuple(got.shape):
+            raise ValueError(
+                f"checkpoint {path}, {leaf_name(i)}: manifest shape "
+                f"{tuple(m_shapes[i])} != stored {tuple(got.shape)} — "
+                f"manifest and arrays.npz disagree (partial overwrite?)")
+        if m_dtypes is not None and i < len(m_dtypes) and \
+                np.dtype(m_dtypes[i]) != np.dtype(got.dtype):
+            raise ValueError(
+                f"checkpoint {path}, {leaf_name(i)}: manifest dtype "
+                f"{m_dtypes[i]} != stored {got.dtype} — manifest and "
+                f"arrays.npz disagree (partial overwrite?)")
+        loaded.append(got)
     tree = jax.tree_util.tree_unflatten(treedef, loaded)
     if shardings is not None:
         tree = jax.tree_util.tree_map(
             lambda arr, sh: jax.device_put(arr, sh), tree, shardings)
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
     return tree, manifest["extras"]
 
 

@@ -20,6 +20,10 @@ class SAConfig:
     cache: bool = True          # compiled-builder cache + bucketed padding
     pack_keys: bool = True
     axis: str = "bsp"
+    store_dir: str = ""         # IndexStore root for serving ("" = build
+                                # in-process, never persist)
+    query_batch: int = 64       # patterns per batched query tick
+                                # (repro.api.QuerySession batch_size)
 
     def to_options(self, *, mesh=None, counters=None, stats=None):
         """The `repro.api.SAOptions` plan this config describes. Runtime

@@ -4,13 +4,17 @@ ring-buffer KV caches / recurrent states.
     python -m repro.launch.serve --arch rwkv6-1.6b --smoke --prompt-len 16 \\
         --gen 32 --batch 4
 
-The paper's own workload is served here too: `--arch suffix-array` builds a
-`repro.api.SuffixArrayIndex` over a synthetic corpus through the facade
-(BSP backend on a mesh when more than one device is visible, vectorised JAX
-otherwise) and answers a batch of substring count/locate queries.
+The paper's own workload is served here too: `--arch suffix-array` obtains
+a `repro.api.SuffixArrayIndex` over a synthetic corpus — restored from a
+persistent `repro.api.IndexStore` when `--store` points at a warm one,
+built through the facade otherwise (BSP backend on a mesh when more than
+one device is visible, vectorised JAX otherwise) — and answers substring
+count/locate queries in batched ticks through a `repro.api.QuerySession`
+(one jitted vectorised binary search per tick, p50/p95/p99 reported).
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
-        python -m repro.launch.serve --arch suffix-array --smoke --queries 64
+        python -m repro.launch.serve --arch suffix-array --smoke --queries 64 \\
+        --store /tmp/sa_store --query-batch 64
 """
 from __future__ import annotations
 
@@ -54,12 +58,24 @@ def prefill_then_decode(params, cfg, prompts, gen: int, *, enc_out=None,
 
 
 def serve_sa_queries(cfg, *, n_chars: int, n_docs: int, n_queries: int,
-                     pattern_len: int = 16, seed: int = 0):
-    """Build a `SuffixArrayIndex` through the facade and serve substring
-    queries against it. Backend selection is the facade's auto rule: a 1-D
-    mesh over all devices when p > 1 (the paper's Algorithm 3), else the
-    vectorised single-device DC-v."""
-    from ..api import SuffixArrayIndex, builder_cache_stats
+                     pattern_len: int = 16, seed: int = 0,
+                     store_dir: str | None = None,
+                     query_batch: int | None = None):
+    """Serve substring queries through the query engine.
+
+    The index is a persistent artifact: with a `store_dir` (flag or
+    `cfg.store_dir`) the corpus is looked up in an
+    `repro.api.IndexStore` first — a warm restart *restores* the index
+    (builder-cache stats stay at zero builds) instead of rebuilding it.
+    On a miss/stale entry the build goes through the facade's auto rule
+    (a 1-D mesh over all devices when p > 1, else the vectorised
+    single-device DC-v) and is persisted for the next process.
+
+    Queries no longer run one-at-a-time: a `repro.api.QuerySession`
+    chops them into ticks of `query_batch` patterns, each tick one jitted
+    vectorised binary search, and reports p50/p95/p99 tick latency."""
+    from ..api import (IndexStore, QuerySession, SuffixArrayIndex,
+                      builder_cache_stats, corpus_fingerprint, encode_docs)
     from ..bsp.counters import BSPCounters
     from .mesh import make_sa_mesh
 
@@ -70,10 +86,27 @@ def serve_sa_queries(cfg, *, n_chars: int, n_docs: int, n_queries: int,
     doc_len = max(n_chars // max(n_docs, 1), pattern_len + 1)
     docs = [rng.integers(0, 256, size=doc_len) for _ in range(n_docs)]
 
+    store_dir = store_dir if store_dir is not None else cfg.store_dir
     t0 = time.time()
-    index = SuffixArrayIndex.from_docs(docs, opts)
+    if store_dir:
+        store = IndexStore(store_dir)
+        text, _, _ = encode_docs(docs)
+        # one entry per corpus configuration, so alternating --smoke/full
+        # (or batch/seed changes) coexist instead of going mutually stale
+        entry = f"corpus-n{n_chars}-d{n_docs}-s{seed}"
+        index, status = store.get_or_build(
+            entry,
+            lambda: SuffixArrayIndex.from_docs(docs, opts, sigma=256),
+            options=opts, corpus_sha=corpus_fingerprint(text))
+        age = store.manifest_age(entry)
+        print(f"index store: {status} (root={store.root}, entry={entry}, "
+              f"manifest_age={age:.1f}s, {store.stats()})")
+    else:
+        status = "off"
+        index = SuffixArrayIndex.from_docs(docs, opts, sigma=256)
     build_s = time.time() - t0
-    print(f"indexed {index.n} chars / {index.n_docs} docs in {build_s:.2f}s "
+    verb = "restored" if status == "hit" else "indexed"
+    print(f"{verb} {index.n} chars / {index.n_docs} docs in {build_s:.2f}s "
           f"(backend={opts.resolve_backend()}, "
           f"builder_cache={builder_cache_stats()})")
     if counters is not None and counters.supersteps:
@@ -85,22 +118,33 @@ def serve_sa_queries(cfg, *, n_chars: int, n_docs: int, n_queries: int,
               f"(sort_impl={impl})")
 
     # half the queries are planted substrings (must hit), half random
-    hits = 0
-    t0 = time.time()
+    patterns, planted = [], []
     for q in range(n_queries):
         if q % 2 == 0:
             d = rng.integers(0, n_docs)
             at = rng.integers(0, doc_len - pattern_len)
-            pat = docs[d][at:at + pattern_len]
+            patterns.append(docs[d][at:at + pattern_len])
+            planted.append(q)
         else:
-            pat = rng.integers(0, 256, size=pattern_len)
-        c = index.count(pat)
-        if q % 2 == 0:
-            assert c >= 1 and len(index.locate(pat)) == c
-        hits += int(c > 0)
+            patterns.append(rng.integers(0, 256, size=pattern_len))
+
+    batch = int(query_batch if query_batch is not None else cfg.query_batch)
+    session = QuerySession(index, batch_size=batch)
+    t0 = time.time()
+    counts = session.count(patterns)
     dt = time.time() - t0
-    print(f"served {n_queries} count/locate queries in {dt:.3f}s "
-          f"({n_queries / max(dt, 1e-9):.0f} qps), {hits} hit")
+    # snapshot BEFORE the verification pass below, so the reported
+    # qps/percentiles describe exactly the timed count workload
+    lat = session.latency_summary()
+    assert np.all(counts[planted] >= 1), "planted patterns must hit"
+    check = planted[:min(8, len(planted))]
+    located = session.locate([patterns[q] for q in check])
+    assert all(len(pos) == counts[q] for q, pos in zip(check, located))
+    hits = int(np.sum(counts > 0))
+    print(f"served {len(patterns)} count queries in "
+          f"{dt:.3f}s ({lat['qps']:.0f} qps, batch={batch}), {hits} hit; "
+          f"tick latency p50={lat['p50_us']:.0f}us "
+          f"p95={lat['p95_us']:.0f}us p99={lat['p99_us']:.0f}us")
     return index
 
 
@@ -114,6 +158,12 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--queries", type=int, default=64,
                     help="query count for --arch suffix-array")
+    ap.add_argument("--store", default=None,
+                    help="IndexStore root for --arch suffix-array (a warm "
+                         "restart restores the index instead of rebuilding)")
+    ap.add_argument("--query-batch", type=int, default=None,
+                    help="patterns per batched query tick "
+                         "(default: cfg.query_batch)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -121,7 +171,9 @@ def main():
         n_chars = 20_000 if args.smoke else cfg.n
         return serve_sa_queries(cfg, n_chars=n_chars, n_docs=args.batch,
                                 n_queries=args.queries,
-                                pattern_len=args.prompt_len)
+                                pattern_len=args.prompt_len,
+                                store_dir=args.store,
+                                query_batch=args.query_batch)
     if args.smoke:
         cfg = cfg.smoke()
     params, _ = lm_init(jax.random.PRNGKey(0), cfg)

@@ -65,9 +65,21 @@ def build_corpus_sa(docs: list, sa_builder=None,
 
 
 def count_occurrences(csa: CorpusSA, pattern) -> int:
-    """DEPRECATED: use `SuffixArrayIndex.count(pattern)`."""
+    """DEPRECATED: use `SuffixArrayIndex.count(pattern)`.
+
+    Keeps the *legacy* query semantics this module always had, which the
+    facade has since tightened (see docs/api.md "Migrating from
+    repro.text.corpus_sa"): an empty pattern counts 0 (the facade counts
+    n — empty prefix of every suffix) and out-of-alphabet values count 0
+    (the facade raises ValueError)."""
     _deprecated("count_occurrences", "repro.api.SuffixArrayIndex.count")
-    return csa.as_index().count(pattern)
+    idx = csa.as_index()
+    pat = np.asarray(pattern, np.int64).ravel()
+    if len(pat) == 0:
+        return 0
+    if idx.n and len(pat) and int(pat.max()) >= idx.sigma:
+        return 0
+    return idx.count(pattern)
 
 
 def cross_doc_duplicates(csa: CorpusSA, min_len: int):

@@ -162,7 +162,9 @@ def test_count_locate_match_naive():
                     if x[i:i + m].tolist() == pat.tolist()]
             assert idx.count(pat) == len(want)
             assert idx.locate(pat).tolist() == want
-    assert idx.count([]) == 0
+    assert idx.count([]) == len(x)       # empty prefix of every suffix
+    with pytest.raises(ValueError):      # "every position" is not a locate
+        idx.locate([])
     assert idx.count(np.zeros(401, np.int64)) == 0   # longer than the text
 
 

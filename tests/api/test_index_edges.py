@@ -39,9 +39,13 @@ def test_encode_docs_empty():
 
 def test_from_docs_all_empty_docs():
     idx = SuffixArrayIndex.from_docs([[], []])
-    # two separators only, no payload
+    # two separators only, no payload → the data alphabet is empty and
+    # every data query is out-of-alphabet (rejected, not silently 0)
     assert idx.n == 2 and idx.n_docs == 2
-    assert idx.count([0]) == 0          # payload alphabet is empty
+    assert idx.sigma == 0
+    with pytest.raises(ValueError):
+        idx.count([0])
+    assert idx.count([]) == 2           # empty prefix of both separators
     assert idx.ngram_stats(1).total == 0
     assert idx.duplicate_spans(1) == []
     assert idx.cross_doc_duplicates(1) == []
@@ -109,6 +113,8 @@ def test_suffix_cmp_no_wraparound_on_empty_index():
 
 def test_pattern_longer_than_text():
     idx = SuffixArrayIndex.build(np.array([1, 2]))
-    assert idx.count([1, 2, 3]) == 0
-    assert idx.locate([1, 2, 3]).tolist() == []
+    assert idx.count([1, 2, 2]) == 0        # longer than the text: 0
+    assert idx.locate([1, 2, 2]).tolist() == []
     assert idx.count([1, 2]) == 1
+    with pytest.raises(ValueError):         # 3 ≥ sigma: rejected, not 0
+        idx.count([1, 2, 3])

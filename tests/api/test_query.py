@@ -1,0 +1,235 @@
+"""Equivalence + contract tests for the batched query engine
+(`repro.api.query`): the jitted vectorised binary search must agree with
+the scalar `_sa_range` loop pattern-for-pattern on oracle-built indexes
+(mixed lengths, empty, absent, full-text, cross-separator), re-used
+buckets must not re-trace, and the new pattern-alphabet semantics
+(`count("") == n`, out-of-alphabet → ValueError) must hold on both paths.
+"""
+import numpy as np
+import pytest
+
+from repro.api import (QueryBatch, QuerySession, SAOptions, SuffixArrayIndex,
+                       query_cache_stats)
+from repro.api.query import _pow2_bucket, trace_events
+
+ORACLE = SAOptions(backend="oracle")
+
+
+def scalar_ranges(idx, patterns):
+    """The pre-batch reference: one numpy bisection loop per pattern."""
+    return [idx._sa_range(idx._encode_pattern(p)) for p in patterns]
+
+
+def _single_doc_index():
+    rng = np.random.default_rng(5)
+    return SuffixArrayIndex.build(rng.integers(0, 4, 300), ORACLE), None
+
+
+def _multi_doc_index():
+    rng = np.random.default_rng(6)
+    docs = [rng.integers(0, 4, int(rng.integers(10, 80))) for _ in range(4)]
+    return SuffixArrayIndex.from_docs(docs, ORACLE), docs
+
+
+def _periodic_index():
+    return SuffixArrayIndex.build(np.tile([0, 1, 2], 60), ORACLE), None
+
+
+CORPORA = {"single": _single_doc_index, "multi": _multi_doc_index,
+           "periodic": _periodic_index}
+
+
+def _pattern_matrix(idx, docs):
+    """Mixed-length pattern set exercising every edge the issue names."""
+    rng = np.random.default_rng(7)
+    raw = (idx.text - idx.shift) if idx.shift else idx.text
+    pats = [[]]                                        # empty
+    for m in (1, 2, 3, 7, 16, 33):                     # planted, mixed len
+        at = int(rng.integers(0, max(idx.n - m, 1)))
+        seg = raw[at:at + m]
+        if idx.shift == 0 or (idx.text[at:at + m] >= idx.shift).all():
+            pats.append(seg.tolist())
+        pats.append(rng.integers(0, idx.sigma, size=m).tolist())  # random
+    pats.append([idx.sigma - 1] * 40)                  # likely absent run
+    if docs is None:
+        pats.append(raw.tolist())                      # the full text
+        pats.append(raw.tolist() + [0])                # longer than the text
+    else:
+        for d in docs:
+            pats.append(np.asarray(d).tolist())        # each full document
+        # cross-separator: tail of doc0 + head of doc1 — must never match
+        pats.append(np.concatenate([docs[0][-2:], docs[1][:2]]).tolist())
+    return pats
+
+
+@pytest.mark.parametrize("corpus", sorted(CORPORA))
+def test_batch_matches_scalar_loop(corpus):
+    idx, docs = CORPORA[corpus]()
+    pats = _pattern_matrix(idx, docs)
+    want = scalar_ranges(idx, pats)
+    lo, hi = idx.sa_ranges_batch(pats)
+    assert lo.tolist() == [w[0] for w in want], corpus
+    assert hi.tolist() == [w[1] for w in want], corpus
+    counts = idx.count_batch(pats)
+    assert counts.tolist() == [h - l for l, h in want]
+    # locate agrees entry-for-entry (empty pattern excluded by contract)
+    non_empty = [p for p in pats if len(p)]
+    located = idx.locate_batch(non_empty)
+    for p, pos in zip(non_empty, located):
+        l, h = idx._sa_range(idx._encode_pattern(p))
+        assert pos.tolist() == sorted(idx.sa[l:h].tolist()), p
+    # and the scalar shims are literally batch-of-one
+    for p in non_empty[:5]:
+        assert idx.count(p) == int(idx.count_batch([p])[0])
+        assert idx.locate(p).tolist() == idx.locate_batch([p])[0].tolist()
+
+
+def test_cross_separator_pattern_never_matches():
+    docs = [[0, 1], [0, 1]]
+    idx = SuffixArrayIndex.from_docs(docs, ORACLE)
+    got = idx.count_batch([[0, 1], [1, 0]])
+    assert got.tolist() == [2, 0]       # "ba" spans the boundary: no match
+
+
+def test_contains_batch():
+    idx, _ = _single_doc_index()
+    flags = idx.contains_batch([idx.text[:4].tolist(), [3, 3, 3, 3, 3, 3]])
+    assert flags.dtype == np.bool_
+    assert flags[0] and flags.shape == (2,)
+
+
+# ------------------------------------------------------ pattern semantics
+def test_empty_pattern_counts_n_and_locate_raises():
+    idx, _ = _single_doc_index()
+    assert idx.count([]) == idx.n
+    assert int(idx.count_batch([[]])[0]) == idx.n
+    with pytest.raises(ValueError, match="empty pattern"):
+        idx.locate([])
+    with pytest.raises(ValueError, match="empty pattern"):
+        idx.locate_batch([[1], []])
+    # empty index: n == 0, so the empty pattern counts 0 consistently
+    empty = SuffixArrayIndex.build(np.zeros(0, np.int64), ORACLE)
+    assert empty.count([]) == 0
+
+
+def test_out_of_alphabet_pattern_rejected():
+    idx = SuffixArrayIndex.build(np.asarray([0, 2, 1, 2]), ORACLE)
+    assert idx.sigma == 3
+    with pytest.raises(ValueError, match="alphabet"):
+        idx.count([3])
+    with pytest.raises(ValueError, match="alphabet"):
+        idx.count_batch([[0], [5]])
+    with pytest.raises(ValueError):
+        idx.count([-1])
+    # an empty index rejects nothing (sigma is vacuous; every count is 0)
+    empty = SuffixArrayIndex.build(np.zeros(0, np.int64), ORACLE)
+    assert empty.count([7]) == 0
+
+
+def test_declared_sigma_widens_alphabet():
+    idx = SuffixArrayIndex.build(np.asarray([0, 1, 0]), ORACLE, sigma=10)
+    assert idx.sigma == 10
+    assert idx.count([9]) == 0          # valid (declared), just absent
+    with pytest.raises(ValueError):
+        idx.count([10])
+
+
+def test_declared_sigma_past_int32_never_false_matches():
+    # pattern values past int32 must not wrap into the device buffer and
+    # alias real symbols (2**32 wrapping to 0 would "match" the zeros)
+    idx = SuffixArrayIndex.build(np.asarray([0, 1, 2, 0]), ORACLE,
+                                 sigma=2 ** 40)
+    assert idx.count([2 ** 32]) == 0
+    assert idx.count_batch([[2 ** 32], [0], [2 ** 33, 1]]).tolist() \
+        == [0, 2, 0]
+
+
+def test_pattern_longer_than_text_batched():
+    idx = SuffixArrayIndex.build(np.asarray([1, 2]), ORACLE)
+    got = idx.count_batch([[1, 2, 1], [1, 2]])
+    assert got.tolist() == [0, 1]
+
+
+# ------------------------------------------------------- buckets / retrace
+def test_query_batch_bucket_shapes():
+    idx, _ = _single_doc_index()
+    qb = QueryBatch.encode(idx, [[1], [1, 2, 3]])
+    assert qb.bucket == (2, 8) and qb.n_queries == 2     # L floor is 8
+    assert qb.lens[:2].tolist() == [1, 3]
+    qb2 = QueryBatch.encode(idx, [[0]] * 5)
+    assert qb2.bucket == (8, 8)                          # B rounds up to 8
+    qb3 = QueryBatch.encode(idx, [list(range(3)) * 4])
+    assert qb3.bucket == (1, 16)
+    assert _pow2_bucket(0) == 1 and _pow2_bucket(9) == 16
+
+
+def test_reused_bucket_does_not_retrace():
+    rng = np.random.default_rng(8)
+    idx = SuffixArrayIndex.build(rng.integers(0, 4, 256), ORACLE)
+    idx.count_batch([[0, 1], [1, 2], [2, 3]])            # bucket (4, 8)
+    before = trace_events()
+    stats0 = query_cache_stats()
+    # same bucket: different patterns, different batch size (3 vs 4)
+    idx.count_batch([[1], [2], [3], [0, 0]])
+    idx.count_batch([rng.integers(0, 4, 8).tolist()] * 4)
+    assert trace_events() == before                      # no new traces
+    stats1 = query_cache_stats()
+    assert stats1["hits"] >= stats0["hits"] + 2
+    assert stats1["buckets"] == stats0["buckets"]
+    # a genuinely new shape does trace (longer patterns → new L bucket)
+    idx.count_batch([rng.integers(0, 4, 20).tolist()])
+    assert trace_events() == before + 1
+
+
+def test_query_batch_reuse_skips_encoding():
+    idx, _ = _multi_doc_index()
+    pats = [[0, 1], [2], [1, 1, 1]]
+    qb = QueryBatch.encode(idx, pats)
+    a = idx.count_batch(qb)
+    b = idx.count_batch(pats)
+    assert a.tolist() == b.tolist()
+    assert len(qb) == 3 and "bucket" in repr(qb)
+
+
+def test_query_batch_rejects_foreign_index():
+    """The encoding shift/sigma are index-specific: a batch run against a
+    different index must raise, not silently return wrong counts."""
+    multi, _ = _multi_doc_index()
+    single, _ = _single_doc_index()
+    qb = QueryBatch.encode(multi, [[1, 2]])
+    with pytest.raises(ValueError, match="different index"):
+        single.count_batch(qb)
+    with pytest.raises(ValueError, match="different index"):
+        single.locate_batch(qb)
+
+
+# ------------------------------------------------------------- session
+def test_query_session_matches_index_and_tracks_latency():
+    idx, _ = _single_doc_index()
+    rng = np.random.default_rng(9)
+    pats = [rng.integers(0, 4, int(rng.integers(1, 9))).tolist()
+            for _ in range(23)]
+    sess = QuerySession(idx, batch_size=8)
+    counts = sess.count(pats)
+    assert counts.tolist() == [idx.count(p) for p in pats]
+    assert sess.contains(pats).tolist() == [c > 0 for c in counts]
+    located = sess.locate(pats[:5])
+    for p, pos in zip(pats, located):
+        assert pos.tolist() == idx.locate(p).tolist()
+    lat = sess.latency_summary()
+    assert lat["queries"] == sess.queries_served == 23 + 23 + 5
+    assert lat["ticks"] == 3 + 3 + 1                    # ceil(23/8) twice + 1
+    assert 0 < lat["p50_us"] <= lat["p95_us"] <= lat["p99_us"]
+    assert lat["qps"] > 0
+    sess.reset_latency()
+    assert sess.latency_summary()["ticks"] == 0
+
+
+def test_query_session_validates_batch_size_and_empty_stream():
+    idx, _ = _single_doc_index()
+    with pytest.raises(ValueError):
+        QuerySession(idx, batch_size=0)
+    sess = QuerySession(idx)
+    assert sess.count([]).tolist() == []
+    assert sess.locate([]) == []
+    assert sess.latency_summary()["qps"] == 0.0

@@ -1,0 +1,272 @@
+"""`IndexStore` / persistence tests: save→load→query round-trips across
+backends, staleness detection (plan fingerprint, corpus hash, format
+version), the hardened `restore_checkpoint` validation it relies on, and
+the serving acceptance check — a warm store restart skips the build
+entirely (builder-cache stats stay at zero in a fresh process).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import zipfile
+
+import numpy as np
+import pytest
+
+from repro.api import (IndexStore, SAOptions, StaleIndexError,
+                       SuffixArrayIndex, corpus_fingerprint, encode_docs,
+                       load_index, save_index)
+from repro.ckpt.checkpoint import restore_checkpoint, save_checkpoint
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "src"))
+
+
+def _docs(seed=3, n_docs=3, max_len=60):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 5, int(rng.integers(5, max_len)))
+            for _ in range(n_docs)]
+
+
+# ------------------------------------------------------------ round-trips
+@pytest.mark.parametrize("backend", ["jax", "bsp"])   # bsp: p=1 degenerate
+def test_save_load_query_roundtrip(backend, tmp_path):
+    docs = _docs()
+    opts = SAOptions(backend=backend, base_threshold=64)
+    idx = SuffixArrayIndex.from_docs(docs, opts)
+    path = str(tmp_path / "idx")
+    idx.save(path)
+    got = SuffixArrayIndex.load(path, options=opts)
+    assert np.array_equal(got.text, idx.text)
+    assert np.array_equal(got.sa, idx.sa)
+    assert np.array_equal(got.doc_starts, idx.doc_starts)
+    assert (got.shift, got.sigma, got.n_docs) == \
+        (idx.shift, idx.sigma, idx.n_docs)
+    # restored index answers queries identically (batched + scalar)
+    pats = [docs[0][:4].tolist(), docs[1].tolist(), [4, 4, 4, 4]]
+    assert got.count_batch(pats).tolist() == idx.count_batch(pats).tolist()
+    assert got.locate(pats[0]).tolist() == idx.locate(pats[0]).tolist()
+    assert got.cross_doc_duplicates(2) == idx.cross_doc_duplicates(2)
+
+
+def test_restored_index_resaves_with_same_plan_fingerprint(tmp_path):
+    """load → save must not relabel the artifact with a default plan."""
+    opts = SAOptions(backend="jax", v0=7, schedule="fixed")
+    idx = SuffixArrayIndex.build(np.asarray([0, 1, 2, 0, 1]), opts)
+    p1, p2, p3 = (str(tmp_path / n) for n in ("a", "b", "c"))
+    idx.save(p1)
+    # restored WITHOUT passing options: the persisted plan is re-attached
+    restored = SuffixArrayIndex.load(p1)
+    assert restored.options.fingerprint() == opts.fingerprint()
+    restored.save(p2)
+    assert SuffixArrayIndex.load(p2, options=opts).n == idx.n
+    # restored WITH options: those take over (already fingerprint-checked)
+    SuffixArrayIndex.load(p1, options=opts).save(p3)
+    assert SuffixArrayIndex.load(p3, options=opts).n == idx.n
+
+
+def test_callable_schedule_keeps_other_plan_fields(tmp_path):
+    """A callable schedule can't round-trip, but every other plan field
+    must survive a load (not collapse to a default SAOptions)."""
+    opts = SAOptions(backend="jax", v0=7, schedule=lambda v, d, m: m,
+                     sort_impl="lax")
+    idx = SuffixArrayIndex.build(np.asarray([0, 1, 2, 0, 1]), opts)
+    path = str(tmp_path / "idx")
+    idx.save(path)
+    restored = SuffixArrayIndex.load(path)
+    ro = restored.options
+    assert (ro.backend, ro.v0, ro.sort_impl) == ("jax", 7, "lax")
+    assert ro.schedule == "accelerated"       # the one lossy field
+
+
+def test_lcp_persisted_only_when_computed(tmp_path):
+    idx = SuffixArrayIndex.build(np.tile([0, 1, 2], 40))
+    p1 = str(tmp_path / "nolcp")
+    idx.save(p1)
+    assert SuffixArrayIndex.load(p1)._lcp is None     # stayed lazy
+    _ = idx.lcp                                       # force Kasai
+    p2 = str(tmp_path / "lcp")
+    idx.save(p2)
+    restored = SuffixArrayIndex.load(p2)
+    assert restored._lcp is not None                  # no recompute needed
+    assert np.array_equal(restored.lcp, idx.lcp)
+
+
+def test_empty_index_roundtrip(tmp_path):
+    idx = SuffixArrayIndex.from_docs([])
+    path = str(tmp_path / "empty")
+    idx.save(path)
+    got = SuffixArrayIndex.load(path)
+    assert got.n == 0 and got.n_docs == 0 and got.count([]) == 0
+
+
+# -------------------------------------------------------------- staleness
+def test_load_rejects_wrong_plan_and_corpus(tmp_path):
+    docs = _docs()
+    opts = SAOptions(backend="jax")
+    idx = SuffixArrayIndex.from_docs(docs, opts)
+    path = str(tmp_path / "idx")
+    save_index(path, idx)
+    with pytest.raises(StaleIndexError, match="plan"):
+        load_index(path, options=SAOptions(backend="jax", v0=7))
+    with pytest.raises(StaleIndexError, match="corpus"):
+        load_index(path, expect_corpus_sha="0" * 64)
+    # without expectations the artifact loads fine
+    assert load_index(path).n == idx.n
+
+
+def test_load_rejects_format_version_and_kind(tmp_path):
+    idx = SuffixArrayIndex.build(np.asarray([0, 1, 0, 1]))
+    path = str(tmp_path / "idx")
+    save_index(path, idx)
+    mpath = os.path.join(path, "step_00000000", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["extras"]["format"] = 999
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(StaleIndexError, match="format"):
+        load_index(path)
+    manifest["extras"]["kind"] = "lm-checkpoint"
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(StaleIndexError, match="not a suffix-array"):
+        load_index(path)
+
+
+def test_get_or_build_traffic(tmp_path):
+    docs = _docs(seed=11)
+    opts = SAOptions(backend="jax")
+    text, _, _ = encode_docs(docs)
+    sha = corpus_fingerprint(text)
+    store = IndexStore(str(tmp_path / "store"))
+    builds = []
+
+    def build():
+        builds.append(1)
+        return SuffixArrayIndex.from_docs(docs, opts)
+
+    _, s1 = store.get_or_build("c", build, options=opts, corpus_sha=sha)
+    _, s2 = store.get_or_build("c", build, options=opts, corpus_sha=sha)
+    assert (s1, s2) == ("miss", "hit") and len(builds) == 1
+    # corpus changed → stale → rebuild + re-persist
+    _, s3 = store.get_or_build("c", build, options=opts,
+                               corpus_sha="f" * 64)
+    assert s3 == "stale" and len(builds) == 2
+    assert store.stats() == {"entries": 1, "hits": 1, "misses": 1,
+                             "stale": 1}
+    assert store.entries() == ["c"]
+    assert store.manifest_age("c") is not None
+    assert store.manifest_age("nope") is None
+    with pytest.raises(ValueError):
+        store.path("../escape")
+    with pytest.raises(FileNotFoundError):
+        store.load("nope")
+
+
+def test_fingerprint_covers_plan_not_runtime():
+    base = SAOptions(backend="jax", v0=3)
+    assert base.fingerprint() == SAOptions(backend="jax").fingerprint()
+    # runtime objects and execution knobs don't invalidate artifacts
+    assert base.fingerprint() == \
+        SAOptions(backend="jax", cache=False, counters=object(),
+                  stats=object(), validate=False).fingerprint()
+    # construction fields do
+    for change in ({"v0": 7}, {"schedule": "fixed"}, {"base_threshold": 99},
+                   {"sort_impl": "lax"}, {"backend": "seq"}):
+        assert base.replace(**change).fingerprint() != base.fingerprint()
+
+
+# ------------------------------------------- restore_checkpoint hardening
+def _tree():
+    return {"a": np.arange(6, dtype=np.int32),
+            "b": np.ones((2, 3), np.float32)}
+
+
+def test_restore_validates_shape_dtype_and_count(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 0, _tree())
+    ok, _ = restore_checkpoint(d, 0, _tree())
+    assert np.array_equal(ok["a"], _tree()["a"])
+    with pytest.raises(ValueError, match="shape"):
+        restore_checkpoint(d, 0, {"a": np.zeros(5, np.int32),
+                                  "b": np.ones((2, 3), np.float32)})
+    with pytest.raises(ValueError, match="dtype"):
+        restore_checkpoint(d, 0, {"a": np.zeros(6, np.int64),
+                                  "b": np.ones((2, 3), np.float32)})
+    with pytest.raises(ValueError, match="leaves"):
+        restore_checkpoint(d, 0, {"a": np.zeros(6, np.int32)})
+    with pytest.raises(FileNotFoundError, match="COMMITTED"):
+        restore_checkpoint(d, 99, _tree())
+
+
+def test_restore_detects_manifest_npz_disagreement(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 0, _tree())
+    step = os.path.join(d, "step_00000000")
+    # arrays.npz rewritten with a different shape for leaf 0, manifest kept:
+    # like_tree matching the *new* npz must still fail on the manifest check
+    np.savez(os.path.join(step, "arrays.npz"),
+             **{"0": np.arange(4, dtype=np.int32),
+                "1": np.ones((2, 3), np.float32)})
+    with pytest.raises(ValueError, match="manifest"):
+        restore_checkpoint(d, 0, {"a": np.zeros(4, np.int32),
+                                  "b": np.ones((2, 3), np.float32)})
+
+
+def test_restore_detects_truncated_npz(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 0, _tree())
+    step = os.path.join(d, "step_00000000")
+    npz = os.path.join(step, "arrays.npz")
+    with zipfile.ZipFile(npz) as z:
+        keep = z.read("0.npy")
+    with zipfile.ZipFile(npz, "w") as z:      # drop leaf 1 entirely
+        z.writestr("0.npy", keep)
+    with pytest.raises(ValueError, match="leaves|missing"):
+        restore_checkpoint(d, 0, _tree())
+
+
+def test_store_surfaces_tampered_arrays(tmp_path):
+    """The full stack: a corrupted store entry raises a descriptive error
+    through IndexStore.load instead of restoring garbage."""
+    idx = SuffixArrayIndex.build(np.asarray([0, 1, 2, 1, 0]))
+    path = str(tmp_path / "idx")
+    save_index(path, idx)
+    step = os.path.join(path, "step_00000000")
+    data = dict(np.load(os.path.join(step, "arrays.npz")))
+    data["2"] = data["2"][:2]                 # truncate one leaf
+    np.savez(os.path.join(step, "arrays.npz"), **data)
+    with pytest.raises(ValueError, match="shape"):
+        load_index(path)
+
+
+# ------------------------------------------------- warm serve (subprocess)
+def test_serve_restart_with_warm_store_skips_build(tmp_path):
+    """Acceptance: a serve restart with a warm IndexStore restores instead
+    of rebuilding — the second process reports a store hit and ZERO
+    builder-cache traffic (no build_suffix_array call at all)."""
+    code = textwrap.dedent(f"""
+    from repro.api import builder_cache_stats
+    from repro.configs import get_config
+    from repro.launch.serve import serve_sa_queries
+    serve_sa_queries(get_config("suffix-array"), n_chars=4000, n_docs=2,
+                     n_queries=8, pattern_len=8,
+                     store_dir={str(tmp_path / 'store')!r}, query_batch=8)
+    print("BUILDER_STATS", builder_cache_stats())
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    outs = []
+    for _ in range(2):
+        r = subprocess.run([sys.executable, "-c", code], env=env, text=True,
+                           capture_output=True, timeout=420)
+        assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+        outs.append(r.stdout)
+    assert "index store: miss" in outs[0]
+    assert "indexed" in outs[0]
+    assert "index store: hit" in outs[1]
+    assert "restored" in outs[1]
+    assert "BUILDER_STATS {'entries': 0, 'hits': 0, 'misses': 0}" in outs[1]
