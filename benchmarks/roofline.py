@@ -23,6 +23,8 @@ RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun2")
 def load(d=None):
     d = d or RESULTS
     recs = []
+    if not os.path.isdir(d):
+        return recs
     for f in sorted(os.listdir(d)):
         if f.endswith(".json"):
             r = json.load(open(os.path.join(d, f)))
@@ -62,6 +64,11 @@ def advice(t, r):
 
 def main():
     recs = load()
+    if not recs:
+        print(f"# roofline: no dry-run records under {RESULTS} — run the "
+              f"dry-run sweep first (table skipped, not an error)")
+        print("roofline/skipped,0.0,records=0")
+        return
     print("# roofline: arch, shape, mesh, compute_s, memory_s, collective_s,"
           " dominant, roofline_frac, model/HLO")
     lines = ["| arch | shape | mesh | compute (s) | memory (s) | "

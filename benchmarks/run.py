@@ -1,25 +1,39 @@
 """Benchmark harness: one module per paper table/figure + system benches.
-Prints ``name,us_per_call,derived`` CSV lines."""
+Prints ``name,us_per_call,derived`` CSV lines.
+
+The serving bench runs in smoke mode here (the full SLO sweep is a
+dedicated run: ``python -m benchmarks.serve_slo``). The roofline table
+needs dry-run records under results/ and is opt-in via ``--roofline``.
+"""
+import argparse
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--roofline", action="store_true",
+                    help="include the roofline table (reads dry-run records "
+                         "under results/; skipped by default)")
+    args = ap.parse_args(argv)
     from . import (bsp_throughput, kernels_bench, query_throughput, roofline,
-                   sa_throughput, supersteps, table1_example, table2_covers,
-                   table3_rounds)
+                   sa_throughput, serve_slo, supersteps, table1_example,
+                   table2_covers, table3_rounds)
     mods = [table1_example, table2_covers, table3_rounds, supersteps,
-            sa_throughput, query_throughput, kernels_bench, roofline,
-            bsp_throughput]
-    # the harness runs the distributed bench in smoke mode (full n × p grid
-    # is a dedicated run: python -m benchmarks.bsp_throughput)
-    argv = {bsp_throughput: ["--smoke", "--out", ""]}
+            sa_throughput, query_throughput, kernels_bench,
+            bsp_throughput, serve_slo]
+    if args.roofline:
+        mods.insert(mods.index(bsp_throughput), roofline)
+    # the harness runs the distributed + serving benches in smoke mode
+    # (full grids are dedicated runs of those modules)
+    modargs = {bsp_throughput: ["--smoke", "--out", ""],
+               serve_slo: ["--smoke", "--out", ""]}
     failed = []
     for m in mods:
         name = m.__name__.split(".")[-1]
         print(f"## {name}")
         try:
-            m.main(*([argv[m]] if m in argv else []))
+            m.main(*([modargs[m]] if m in modargs else []))
         except Exception as e:
             failed.append(name)
             traceback.print_exc()

@@ -74,10 +74,18 @@ def clear_query_cache() -> None:
     _CACHE_STATS["misses"] = 0
 
 
-def _pow2_bucket(m: int, floor: int = 1) -> int:
-    """Smallest power of two ≥ max(m, floor)."""
+def pow2_bucket(m: int, floor: int = 1) -> int:
+    """Smallest power of two ≥ max(m, floor).
+
+    The shape-quantisation rule shared by the query engine and the serving
+    tier: batch sizes and pattern lengths land on this grid so an
+    open-ended stream of shapes maps onto O(log) compiled kernels."""
     m = max(int(m), floor, 1)
     return 1 << (m - 1).bit_length()
+
+
+#: kept as an alias — pre-existing internal callers use the underscored name.
+_pow2_bucket = pow2_bucket
 
 
 class QueryBatch:
@@ -121,7 +129,15 @@ class QueryBatch:
     @classmethod
     def encode(cls, index, patterns, dtype=np.int32) -> "QueryBatch":
         """Encode `patterns` (a sequence of int sequences) against `index`."""
-        enc = [index._encode_pattern(p) for p in patterns]
+        return cls.from_encoded(index, [index._encode_pattern(p)
+                                        for p in patterns], dtype)
+
+    @classmethod
+    def from_encoded(cls, index, enc, dtype=np.int32) -> "QueryBatch":
+        """Build a batch from patterns already passed through
+        `index._encode_pattern` (the serving tier validates/encodes each
+        request at submit time, so coalesced batches must not pay — or
+        double-apply — the shift again)."""
         B = len(enc)
         max_len = max((len(p) for p in enc), default=0)
         b_pad = _pow2_bucket(B)
@@ -204,12 +220,27 @@ def _ranges_kernel(text, sa, pats, lens):
     return lo[:, 0], lo[:, 1]
 
 
-def batch_ranges(index, batch: QueryBatch) -> tuple[np.ndarray, np.ndarray]:
+def stage_batch(index, batch: QueryBatch):
+    """Begin the host→device transfer of a batch's buffers.
+
+    Returns opaque staged device arrays for `batch_ranges(..., staged=)`.
+    `jax.device_put` dispatches asynchronously, so the serving tier calls
+    this for the *next* coalesced batch while the previous one's kernel is
+    still in flight — the transfer rides under the in-flight compute
+    (double-buffering). Harmless but pointless on an empty index."""
+    batch.check_bound_to(index)
+    return (jax.device_put(batch.pats), jax.device_put(batch.lens))
+
+
+def batch_ranges(index, batch: QueryBatch, *,
+                 staged=None) -> tuple[np.ndarray, np.ndarray]:
     """Resolve every pattern in `batch` to its `[lo, hi)` SA-rank range.
 
     One jitted call for the whole batch; returns two int64[n_queries]
     arrays (padding rows already sliced off). An empty index maps every
-    pattern to the empty range (0, 0).
+    pattern to the empty range (0, 0). Pass `staged=stage_batch(...)` to
+    run against buffers whose transfer was already started (the serving
+    tier's double-buffer path); without it the transfer happens here.
     """
     batch.check_bound_to(index)
     k = batch.n_queries
@@ -223,8 +254,9 @@ def batch_ranges(index, batch: QueryBatch) -> tuple[np.ndarray, np.ndarray]:
     else:
         _CACHE_STATS["misses"] += 1
         _SEEN_BUCKETS.add(key)
-    lo, hi = _ranges_kernel(text_d, sa_d, jnp.asarray(batch.pats),
-                            jnp.asarray(batch.lens))
+    pats_d, lens_d = (staged if staged is not None
+                      else (jnp.asarray(batch.pats), jnp.asarray(batch.lens)))
+    lo, hi = _ranges_kernel(text_d, sa_d, pats_d, lens_d)
     return (np.asarray(lo)[:k].astype(np.int64),
             np.asarray(hi)[:k].astype(np.int64))
 
@@ -248,6 +280,8 @@ class QuerySession:
         self.batch_size = int(batch_size)
         self._tick_us: list[float] = []     # wall µs per tick
         self._tick_sizes: list[int] = []    # queries per tick
+        self._warmup_ticks = 0
+        self._server = None                 # lazy repro.serve.SAServer
 
     # ------------------------------------------------------------ serving
     def _ticks(self, patterns):
@@ -261,6 +295,26 @@ class QuerySession:
         self._tick_us.append(1e6 * (time.perf_counter() - t0))
         self._tick_sizes.append(len(tick))
         return out
+
+    def warmup(self, pattern_lens=(8,)) -> int:
+        """Run one un-recorded tick per pattern-length bucket.
+
+        The first tick at a new `(B_pad, L_pad)` shape pays the jax trace +
+        XLA compile — tens of ms to seconds on CPU, orders of magnitude
+        above steady state. Serving percentiles must describe steady state,
+        so callers warm the buckets they expect *before* timed traffic;
+        warmed ticks are counted (`latency_summary()["warmup_ticks"]`) but
+        never enter the percentile pool. Returns the tick count run."""
+        done = 0
+        for m in pattern_lens:
+            m = max(int(m), 1)
+            if self.index.n == 0 or self.index.sigma == 0:
+                continue        # nothing to compile against / no alphabet
+            # value 0 is always in-alphabet when sigma ≥ 1
+            self.index.count_batch([np.zeros(m, np.int64)] * self.batch_size)
+            self._warmup_ticks += 1
+            done += 1
+        return done
 
     def count(self, patterns) -> np.ndarray:
         """Occurrence counts for a stream of patterns — int64[len]."""
@@ -285,10 +339,18 @@ class QuerySession:
         return int(sum(self._tick_sizes))
 
     def latency_summary(self) -> dict:
-        """Aggregate latency stats over every tick served so far."""
+        """Aggregate latency stats over every *recorded* tick served so far.
+
+        Warmup ticks are excluded (only their count is reported). With no
+        recorded ticks the percentiles and qps are ``None`` — *absent*, not
+        zero — so an idle session aggregated into an SLO report contributes
+        nothing instead of dragging p99 toward a fictitious 0µs.
+        """
         if not self._tick_us:
-            return {"ticks": 0, "queries": 0, "p50_us": 0.0, "p95_us": 0.0,
-                    "p99_us": 0.0, "qps": 0.0}
+            return {"ticks": 0, "queries": 0,
+                    "warmup_ticks": self._warmup_ticks,
+                    "p50_us": None, "p95_us": None, "p99_us": None,
+                    "qps": None}
         per_query = np.repeat(np.asarray(self._tick_us),
                               np.asarray(self._tick_sizes))
         p50, p95, p99 = np.percentile(per_query, [50, 95, 99])
@@ -296,6 +358,7 @@ class QuerySession:
         return {
             "ticks": len(self._tick_us),
             "queries": self.queries_served,
+            "warmup_ticks": self._warmup_ticks,
             "p50_us": float(p50),
             "p95_us": float(p95),
             "p99_us": float(p99),
@@ -305,6 +368,47 @@ class QuerySession:
     def reset_latency(self) -> None:
         self._tick_us.clear()
         self._tick_sizes.clear()
+        self._warmup_ticks = 0
+
+    # ------------------------------------------------- non-blocking submit
+    def submit(self, pattern, **server_knobs):
+        """Submit ONE pattern without blocking; returns a future.
+
+        First call lazily starts a `repro.serve.SAServer` over this
+        session's index (`max_batch=batch_size`; pass coalescing/admission
+        knobs as keyword arguments on that first call — see
+        `repro.serve.SAServer`). The future resolves to a
+        `repro.serve.Response` whose `.count` is the occurrence count.
+        Async traffic is accounted in `server.metrics`, not in this
+        session's closed-loop tick stats. Call `close()` (or use the
+        session as a context manager) to drain and stop the loop.
+        """
+        if self._server is None:
+            from ..serve import SAServer
+            self._server = SAServer(self.index, max_batch=self.batch_size,
+                                    **server_knobs)
+            self._server.start()
+        elif server_knobs:
+            raise ValueError("server knobs only apply to the first submit "
+                             "(the serving loop is already running)")
+        return self._server.submit(pattern)
+
+    @property
+    def server(self):
+        """The lazily-started `repro.serve.SAServer`, or None."""
+        return self._server
+
+    def close(self) -> None:
+        """Drain and stop the async serving loop (no-op if never started)."""
+        if self._server is not None:
+            self._server.stop()
+            self._server = None
+
+    def __enter__(self) -> "QuerySession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def __repr__(self) -> str:
         return (f"QuerySession(index=n{self.index.n}, "

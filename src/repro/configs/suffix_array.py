@@ -24,6 +24,16 @@ class SAConfig:
                                 # in-process, never persist)
     query_batch: int = 64       # patterns per batched query tick
                                 # (repro.api.QuerySession batch_size)
+    # ---- async serving tier (repro.serve.SAServer) ----
+    coalesce_max_wait_us: float = 500.0   # batch-window deadline: extra
+                                # latency a lone request may pay to share
+                                # a kernel with later arrivals
+    queue_depth: int = 1024     # admission bound on queued requests
+    overload_policy: str = "reject"  # "none" | "reject" | "shed"
+                                # (repro.serve.admission.POLICIES)
+    arrival: str = "poisson"    # open-loop arrival process for serving/
+                                # loadgen ("uniform"|"poisson"|"onoff")
+    offered_qps: float = 2000.0  # open-loop offered load for launch/serve
 
     def to_options(self, *, mesh=None, counters=None, stats=None):
         """The `repro.api.SAOptions` plan this config describes. Runtime

@@ -8,13 +8,16 @@ The paper's own workload is served here too: `--arch suffix-array` obtains
 a `repro.api.SuffixArrayIndex` over a synthetic corpus — restored from a
 persistent `repro.api.IndexStore` when `--store` points at a warm one,
 built through the facade otherwise (BSP backend on a mesh when more than
-one device is visible, vectorised JAX otherwise) — and answers substring
-count/locate queries in batched ticks through a `repro.api.QuerySession`
-(one jitted vectorised binary search per tick, p50/p95/p99 reported).
+one device is visible, vectorised JAX otherwise) — and serves substring
+count queries through the asynchronous tier (`repro.serve.SAServer`):
+open-loop seeded arrivals (`--arrival poisson|onoff|uniform` at
+`--offered-qps`), request coalescing into pow2 kernel buckets, admission
+control (`--overload-policy`), and per-request queue/service/total
+latency percentiles with JIT warmup excluded.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
         python -m repro.launch.serve --arch suffix-array --smoke --queries 64 \\
-        --store /tmp/sa_store --query-batch 64
+        --store /tmp/sa_store --query-batch 64 --offered-qps 2000
 """
 from __future__ import annotations
 
@@ -60,8 +63,13 @@ def prefill_then_decode(params, cfg, prompts, gen: int, *, enc_out=None,
 def serve_sa_queries(cfg, *, n_chars: int, n_docs: int, n_queries: int,
                      pattern_len: int = 16, seed: int = 0,
                      store_dir: str | None = None,
-                     query_batch: int | None = None):
-    """Serve substring queries through the query engine.
+                     query_batch: int | None = None,
+                     offered_qps: float | None = None,
+                     arrival: str | None = None,
+                     coalesce_max_wait_us: float | None = None,
+                     queue_depth: int | None = None,
+                     overload_policy: str | None = None):
+    """Serve substring queries through the asynchronous serving tier.
 
     The index is a persistent artifact: with a `store_dir` (flag or
     `cfg.store_dir`) the corpus is looked up in an
@@ -71,12 +79,16 @@ def serve_sa_queries(cfg, *, n_chars: int, n_docs: int, n_queries: int,
     (a 1-D mesh over all devices when p > 1, else the vectorised
     single-device DC-v) and is persisted for the next process.
 
-    Queries no longer run one-at-a-time: a `repro.api.QuerySession`
-    chops them into ticks of `query_batch` patterns, each tick one jitted
-    vectorised binary search, and reports p50/p95/p99 tick latency."""
-    from ..api import (IndexStore, QuerySession, SuffixArrayIndex,
-                      builder_cache_stats, corpus_fingerprint, encode_docs)
+    Traffic is open-loop: `repro.serve.make_arrivals` schedules
+    ~`n_queries` seeded arrivals (process/rate from cfg or flags) and a
+    `repro.serve.SAServer` coalesces them into pow2 kernel buckets under
+    admission control. Kernel-shape compiles are paid in an explicit
+    warmup pass first, so the reported percentiles describe steady
+    state, never JIT time."""
+    from ..api import (IndexStore, SuffixArrayIndex, builder_cache_stats,
+                       corpus_fingerprint, encode_docs)
     from ..bsp.counters import BSPCounters
+    from ..serve import SAServer, make_arrivals, run_open_loop, summarize
     from .mesh import make_sa_mesh
 
     mesh = make_sa_mesh() if len(jax.devices()) > 1 else None
@@ -118,33 +130,64 @@ def serve_sa_queries(cfg, *, n_chars: int, n_docs: int, n_queries: int,
               f"(sort_impl={impl})")
 
     # half the queries are planted substrings (must hit), half random
-    patterns, planted = [], []
+    patterns, planted = [], set()
     for q in range(n_queries):
         if q % 2 == 0:
             d = rng.integers(0, n_docs)
             at = rng.integers(0, doc_len - pattern_len)
             patterns.append(docs[d][at:at + pattern_len])
-            planted.append(q)
+            planted.add(q)
         else:
             patterns.append(rng.integers(0, 256, size=pattern_len))
 
     batch = int(query_batch if query_batch is not None else cfg.query_batch)
-    session = QuerySession(index, batch_size=batch)
+    qps = float(offered_qps if offered_qps is not None else cfg.offered_qps)
+    proc = arrival if arrival is not None else cfg.arrival
+    wait_us = float(coalesce_max_wait_us if coalesce_max_wait_us is not None
+                    else cfg.coalesce_max_wait_us)
+    depth = int(queue_depth if queue_depth is not None else cfg.queue_depth)
+    policy = (overload_policy if overload_policy is not None
+              else cfg.overload_policy)
+
+    server = SAServer(index, max_batch=batch,
+                      coalesce_max_wait_us=wait_us, queue_depth=depth,
+                      overload_policy=policy).start()
     t0 = time.time()
-    counts = session.count(patterns)
+    shapes = server.warmup(pattern_lens=(pattern_len,))
+    print(f"warmup: {shapes} kernel shapes compiled in "
+          f"{time.time() - t0:.2f}s (excluded from percentiles)")
+
+    # ~n_queries seeded open-loop arrivals at the offered rate
+    arrivals = make_arrivals(proc, qps, n_queries / qps, seed=seed)
+    t0 = time.time()
+    responses = run_open_loop(server, patterns, arrivals)
     dt = time.time() - t0
-    # snapshot BEFORE the verification pass below, so the reported
-    # qps/percentiles describe exactly the timed count workload
-    lat = session.latency_summary()
-    assert np.all(counts[planted] >= 1), "planted patterns must hit"
-    check = planted[:min(8, len(planted))]
-    located = session.locate([patterns[q] for q in check])
-    assert all(len(pos) == counts[q] for q, pos in zip(check, located))
-    hits = int(np.sum(counts > 0))
-    print(f"served {len(patterns)} count queries in "
-          f"{dt:.3f}s ({lat['qps']:.0f} qps, batch={batch}), {hits} hit; "
-          f"tick latency p50={lat['p50_us']:.0f}us "
-          f"p95={lat['p95_us']:.0f}us p99={lat['p99_us']:.0f}us")
+    server.stop()
+    slo = summarize(responses, dt)
+
+    # planted patterns that were admitted must hit; spot-check counts
+    # against the closed-loop batched engine (same index, same kernel)
+    ok_hits = [r for i, r in enumerate(responses)
+               if r.ok and (i % n_queries) in planted]
+    assert all(r.count >= 1 for r in ok_hits), "planted patterns must hit"
+    check = [(i, r) for i, r in enumerate(responses) if r.ok][:8]
+    if check:
+        want = index.count_batch([patterns[i % n_queries] for i, _ in check])
+        assert [r.count for _, r in check] == list(want), "tier != engine"
+
+    m = server.metrics.snapshot()
+    lat = {k: (f"{v * 1e3:.0f}us" if v is not None else "absent")
+           for k, v in [("p50", slo["p50_ms"]), ("p95", slo["p95_ms"]),
+                        ("p99", slo["p99_ms"])]}
+    print(f"served {slo['offered']} open-loop queries ({proc}@{qps:.0f} "
+          f"offered qps) in {dt:.3f}s: ok={slo['ok']} "
+          f"rejected={slo['rejected']} shed={slo['shed']} "
+          f"goodput={slo['goodput_qps']:.0f} qps")
+    print(f"latency p50={lat['p50']} p95={lat['p95']} p99={lat['p99']}; "
+          f"coalesced batch mean={m['batch_size']['mean'] or 0:.1f} "
+          f"occupancy={m['bucket_occupancy']['mean'] or 0:.2f} "
+          f"(policy={policy}, queue_depth={depth}, "
+          f"max_wait={wait_us:.0f}us)")
     return index
 
 
@@ -162,8 +205,23 @@ def main():
                     help="IndexStore root for --arch suffix-array (a warm "
                          "restart restores the index instead of rebuilding)")
     ap.add_argument("--query-batch", type=int, default=None,
-                    help="patterns per batched query tick "
+                    help="max coalesced batch for --arch suffix-array "
                          "(default: cfg.query_batch)")
+    ap.add_argument("--offered-qps", type=float, default=None,
+                    help="open-loop offered load (default: cfg.offered_qps)")
+    ap.add_argument("--arrival", default=None,
+                    choices=["uniform", "poisson", "onoff"],
+                    help="arrival process (default: cfg.arrival)")
+    ap.add_argument("--coalesce-max-wait-us", type=float, default=None,
+                    help="batch-window deadline in µs "
+                         "(default: cfg.coalesce_max_wait_us)")
+    ap.add_argument("--queue-depth", type=int, default=None,
+                    help="admission bound on queued requests "
+                         "(default: cfg.queue_depth)")
+    ap.add_argument("--overload-policy", default=None,
+                    choices=["none", "reject", "shed"],
+                    help="behavior past queue_depth (default: "
+                         "cfg.overload_policy)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -173,7 +231,12 @@ def main():
                                 n_queries=args.queries,
                                 pattern_len=args.prompt_len,
                                 store_dir=args.store,
-                                query_batch=args.query_batch)
+                                query_batch=args.query_batch,
+                                offered_qps=args.offered_qps,
+                                arrival=args.arrival,
+                                coalesce_max_wait_us=args.coalesce_max_wait_us,
+                                queue_depth=args.queue_depth,
+                                overload_policy=args.overload_policy)
     if args.smoke:
         cfg = cfg.smoke()
     params, _ = lm_init(jax.random.PRNGKey(0), cfg)

@@ -1,0 +1,60 @@
+"""repro.serve — the asynchronous serving tier over the query engine.
+
+`repro.api.QuerySession` answers closed-loop batches: the caller already
+*has* a batch and waits for it. Production traffic is the opposite —
+many independent clients, one small request each, arriving whenever they
+like. This package is the subsystem in between the two:
+
+* `Coalescer` merges individual requests into the pow2 (batch, length)
+  buckets the jitted query kernel compiles for, closing each window on
+  full-bucket or a max-wait deadline (`repro.serve.coalescer`);
+* `AdmissionController` bounds the queue and applies an overload policy
+  — reject-with-retry-after or shed-oldest — so accepted-request p99
+  stays flat past saturation instead of diverging
+  (`repro.serve.admission`);
+* `SAServer` runs the loop: non-blocking `submit()` → coalesce →
+  double-buffered host→device staging against the in-flight kernel →
+  futures resolved with per-request latency breakdowns
+  (`repro.serve.server`);
+* `ServeMetrics` measures everything — queue-wait/service/total
+  histograms, batch-size and bucket-occupancy distributions, admission
+  counters (`repro.serve.metrics`);
+* `make_arrivals` / `run_open_loop` / `summarize` generate seeded
+  Poisson / bursty ON-OFF open-loop load and fold the responses into
+  SLO records (`repro.serve.loadgen`) — what `benchmarks/serve_slo.py`
+  sweeps into `BENCH_serve_slo.json`.
+
+Quickstart (tiny, CPU-safe)
+---------------------------
+>>> import numpy as np
+>>> from repro.api import SuffixArrayIndex
+>>> from repro.serve import SAServer
+>>> idx = SuffixArrayIndex.build(np.array([0, 2, 1, 0, 0, 2, 1, 0]),
+...                              sigma=4)
+>>> with SAServer(idx, max_batch=4, coalesce_max_wait_us=200.0) as srv:
+...     futs = [srv.submit([0, 2]), srv.submit([1, 0]), srv.submit([3])]
+...     counts = [f.result().count for f in futs]
+>>> counts
+[2, 2, 0]
+"""
+from .admission import AdmissionController, AdmissionDecision, POLICIES
+from .coalescer import Coalescer, PendingQuery
+from .loadgen import ARRIVALS, make_arrivals, run_open_loop, summarize
+from .metrics import Histogram, ServeMetrics
+from .server import Response, SAServer
+
+__all__ = [
+    "ARRIVALS",
+    "AdmissionController",
+    "AdmissionDecision",
+    "Coalescer",
+    "Histogram",
+    "POLICIES",
+    "PendingQuery",
+    "Response",
+    "SAServer",
+    "ServeMetrics",
+    "make_arrivals",
+    "run_open_loop",
+    "summarize",
+]

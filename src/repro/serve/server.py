@@ -1,0 +1,307 @@
+"""`SAServer` — the asynchronous serving loop over one suffix-array index.
+
+Data path (one request's life):
+
+    submit(pattern)                      [caller thread]
+      validate + encode (ValueError raised synchronously)
+      AdmissionController.admit(queue depth, oldest age)
+        reject → completed future, Response(status="rejected", retry_after)
+        shed   → oldest pending request is evicted, new one admitted
+        accept → PendingQuery into the inbox, coalesce thread woken
+    coalesce loop                        [thread 1]
+      inbox → Coalescer buckets; windows close on full-bucket or
+      max-wait deadline → QueryBatch.from_encoded + stage_batch
+      (host→device transfer STARTS here) → staging queue (depth 1)
+    device loop                          [thread 2]
+      staging queue → _ranges_kernel on the staged buffers →
+      block on results → resolve futures, record metrics
+
+The staging queue of depth 1 is the double buffer: while the device loop
+blocks on batch k's kernel, the coalesce thread encodes and stages batch
+k+1, whose host→device transfer rides under the in-flight compute. When
+both slots are busy the coalesce thread itself blocks, arrivals pile up
+in the inbox, the measured queue depth grows, and admission control sees
+the overload — backpressure propagates end to end instead of vanishing
+into an unbounded buffer.
+
+Latency accounting is per request: queue wait (arrival → batch left for
+the device), service (device pickup → results resolved), total. Under
+open-loop load `submit(..., t_arrival=scheduled)` dates the request from
+its *scheduled* arrival, so loadgen lateness counts against the server
+(no coordinated omission).
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from ..api.query import (QueryBatch, _MIN_LEN_BUCKET, batch_ranges,
+                         pow2_bucket, stage_batch)
+from .admission import AdmissionController, POLICIES
+from .coalescer import Coalescer, PendingQuery
+from .metrics import ServeMetrics
+
+__all__ = ["Response", "SAServer", "POLICIES"]
+
+#: EMA weight for the per-request service-cost estimate (retry-after hints)
+_EMA_ALPHA = 0.2
+
+
+@dataclass(frozen=True)
+class Response:
+    """Terminal state of one submitted request."""
+
+    req_id: int
+    status: str                          # "ok" | "rejected" | "shed"
+    count: Optional[int] = None          # occurrences (status "ok")
+    lo: Optional[int] = None             # SA-rank range (status "ok")
+    hi: Optional[int] = None
+    retry_after_us: Optional[float] = None   # backoff hint ("rejected")
+    queue_us: Optional[float] = None
+    service_us: Optional[float] = None
+    total_us: Optional[float] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
+class SAServer:
+    """Coalescing, admission-controlled serving loop over one index.
+
+    Parameters mirror `repro.configs.SAConfig` serving knobs:
+
+    * `max_batch` — largest coalesced batch (rounded up to a power of
+      two; the kernel-shape bucket batches are emitted at).
+    * `coalesce_max_wait_us` — deadline for a non-full window; the extra
+      latency a lone request can pay for the chance of sharing a kernel.
+    * `queue_depth` / `overload_policy` / `max_queue_age_us` — admission
+      control (`repro.serve.admission`).
+    """
+
+    def __init__(self, index, *, max_batch: int = 256,
+                 coalesce_max_wait_us: float = 500.0,
+                 queue_depth: int = 1024,
+                 overload_policy: str = "reject",
+                 max_queue_age_us: Optional[float] = None,
+                 metrics: Optional[ServeMetrics] = None):
+        self.index = index
+        self.coalescer = Coalescer(max_batch=max_batch,
+                                   max_wait_us=coalesce_max_wait_us)
+        self.admission = AdmissionController(queue_depth=queue_depth,
+                                             policy=overload_policy,
+                                             max_age_us=max_queue_age_us)
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        self.warmed_shapes = 0
+        self._ids = itertools.count()
+        self._cond = threading.Condition()
+        self._inbox: collections.deque = collections.deque()
+        self._queued = 0                  # accepted, not yet on the device
+        self._ema_us_per_req: Optional[float] = None
+        self._stage_q: queue.Queue = queue.Queue(maxsize=1)
+        self._running = False
+        self._stopping = False
+        self._threads: list[threading.Thread] = []
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self) -> "SAServer":
+        if self._running:
+            return self
+        self._running, self._stopping = True, False
+        self._threads = [
+            threading.Thread(target=self._coalesce_loop,
+                             name="sa-serve-coalesce", daemon=True),
+            threading.Thread(target=self._device_loop,
+                             name="sa-serve-device", daemon=True),
+        ]
+        for t in self._threads:
+            t.start()
+        return self
+
+    def stop(self, timeout: float = 30.0) -> None:
+        """Drain every pending request, then stop both loops."""
+        if not self._running:
+            return
+        with self._cond:
+            self._stopping = True
+            self._cond.notify_all()
+        for t in self._threads:
+            t.join(timeout)
+        self._running = False
+
+    def __enter__(self) -> "SAServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -------------------------------------------------------------- warmup
+    def warmup(self, pattern_lens=(8,), batch_buckets=None) -> int:
+        """Compile the kernel shapes live traffic will hit, off the clock.
+
+        Coalesced batches can land on ANY pow2 batch bucket up to
+        `max_batch`, and each distinct `(B_pad, L_pad)` is a separate XLA
+        compile — tens of ms to seconds that would otherwise surface as
+        arbitrary p99 spikes mid-run. Default warms every pow2 batch
+        bucket × every length bucket in `pattern_lens`. Returns the number
+        of shapes run (compiled-or-cached; re-warming is cheap)."""
+        if self.index.n == 0 or self.index.sigma == 0:
+            return 0
+        if batch_buckets is None:
+            b = self.coalescer.max_batch
+            batch_buckets = [1 << k for k in range(b.bit_length())
+                             if (1 << k) <= b]
+        done = 0
+        for m in sorted({pow2_bucket(int(l), floor=_MIN_LEN_BUCKET)
+                         for l in pattern_lens}):
+            for b in batch_buckets:
+                pats = [np.zeros(m, np.int64)] * int(b)
+                batch_ranges(self.index, QueryBatch.encode(self.index, pats))
+                done += 1
+        self.warmed_shapes += done
+        return done
+
+    # -------------------------------------------------------------- submit
+    def submit(self, pattern, *, t_arrival: Optional[float] = None) -> Future:
+        """Submit one pattern; returns a Future resolving to a `Response`.
+
+        Never blocks on the device. Validation errors (out-of-alphabet
+        values) raise synchronously; admission rejections resolve the
+        future immediately with `status="rejected"` and a
+        `retry_after_us` hint."""
+        if not self._running or self._stopping:
+            raise RuntimeError("SAServer is not running (call start())")
+        enc = self.index._encode_pattern(pattern)   # raises on bad alphabet
+        now = time.perf_counter()
+        t_arrival = now if t_arrival is None else float(t_arrival)
+        fut: Future = Future()
+        req = PendingQuery(req_id=next(self._ids), pattern=enc,
+                           t_arrival=t_arrival, future=fut)
+        self.metrics.bump("submitted")
+        with self._cond:
+            decision = self.admission.admit(
+                self._queued, self._oldest_age_us(now), self._ema_us_per_req)
+            if decision.action == "reject":
+                self.metrics.bump("rejected")
+                fut.set_result(Response(
+                    req_id=req.req_id, status="rejected",
+                    retry_after_us=decision.retry_after_us,
+                    total_us=(time.perf_counter() - t_arrival) * 1e6))
+                return fut
+            if decision.action == "shed":
+                victim = self._shed_locked()
+                if victim is not None:
+                    self.metrics.bump("shed")
+                    victim.future.set_result(Response(
+                        req_id=victim.req_id, status="shed",
+                        total_us=(now - victim.t_arrival) * 1e6))
+            self.metrics.bump("accepted")
+            self._inbox.append(req)
+            self._queued += 1
+            self._cond.notify_all()
+        return fut
+
+    def _oldest_age_us(self, now: float) -> float:
+        """Oldest queued age across inbox + coalescer (caller holds lock)."""
+        age = self.coalescer.oldest_age_us(now)
+        if self._inbox:
+            age = max(age, (now - self._inbox[0].t_arrival) * 1e6)
+        return age
+
+    def _shed_locked(self):
+        """Evict the oldest queued request (caller holds the lock)."""
+        victim = None
+        if self._inbox and (self.coalescer.pending_count() == 0):
+            victim = self._inbox.popleft()
+        else:
+            victim = self.coalescer.shed_oldest()
+            if victim is None and self._inbox:
+                victim = self._inbox.popleft()
+        if victim is not None:
+            self._queued -= 1
+        return victim
+
+    # ------------------------------------------------------ coalesce thread
+    def _coalesce_loop(self) -> None:
+        while True:
+            with self._cond:
+                while (not self._inbox and not self._stopping
+                       and self.coalescer.next_deadline() is None):
+                    self._cond.wait()
+                while self._inbox:
+                    self.coalescer.add(self._inbox.popleft())
+                stopping = self._stopping and not self._inbox
+                now = time.perf_counter()
+                batches = self.coalescer.pop_ready(now, flush=stopping)
+                if not batches and not stopping:
+                    deadline = self.coalescer.next_deadline()
+                    if deadline is not None:
+                        self._cond.wait(timeout=max(deadline - now, 0.0))
+                        continue
+            for reqs in batches:
+                self._stage_and_enqueue(reqs)
+            if stopping:
+                self._stage_q.put(None)     # device-loop shutdown sentinel
+                return
+
+    def _stage_and_enqueue(self, reqs) -> None:
+        """Encode + begin host→device transfer, then hand to the device
+        loop. Runs OUTSIDE the lock: staging overlaps both new arrivals
+        and the in-flight kernel. Blocks when the staging slot is full —
+        that is the backpressure edge."""
+        batch = QueryBatch.from_encoded(self.index,
+                                        [r.pattern for r in reqs])
+        staged = (stage_batch(self.index, batch) if self.index.n else None)
+        t_dispatch = time.perf_counter()
+        self.metrics.record_batch(len(reqs), batch.bucket[0])
+        self._stage_q.put((batch, staged, reqs, t_dispatch))
+
+    # -------------------------------------------------------- device thread
+    def _device_loop(self) -> None:
+        while True:
+            item = self._stage_q.get()
+            if item is None:
+                return
+            batch, staged, reqs, t_dispatch = item
+            with self._cond:
+                self._queued -= len(reqs)
+            try:
+                lo, hi = batch_ranges(self.index, batch, staged=staged)
+            except Exception as e:                 # pragma: no cover
+                for r in reqs:
+                    r.future.set_exception(e)
+                continue
+            t_done = time.perf_counter()
+            service_us = (t_done - t_dispatch) * 1e6
+            per_req = service_us / max(len(reqs), 1)
+            self._ema_us_per_req = (
+                per_req if self._ema_us_per_req is None else
+                _EMA_ALPHA * per_req +
+                (1 - _EMA_ALPHA) * self._ema_us_per_req)
+            self.metrics.service_us.add(service_us)
+            for r, l, h in zip(reqs, lo, hi):
+                queue_us = (t_dispatch - r.t_arrival) * 1e6
+                total_us = (t_done - r.t_arrival) * 1e6
+                self.metrics.queue_wait_us.add(queue_us)
+                self.metrics.total_us.add(total_us)
+                self.metrics.bump("completed")
+                r.future.set_result(Response(
+                    req_id=r.req_id, status="ok", count=int(h - l),
+                    lo=int(l), hi=int(h), queue_us=queue_us,
+                    service_us=service_us, total_us=total_us))
+
+    # --------------------------------------------------------------- intro
+    def __repr__(self) -> str:
+        c = self.metrics.counters()
+        return (f"SAServer(n={self.index.n}, "
+                f"max_batch={self.coalescer.max_batch}, "
+                f"policy={self.admission.policy!r}, "
+                f"running={self._running}, completed={c['completed']})")

@@ -232,4 +232,40 @@ def test_query_session_validates_batch_size_and_empty_stream():
     sess = QuerySession(idx)
     assert sess.count([]).tolist() == []
     assert sess.locate([]) == []
-    assert sess.latency_summary()["qps"] == 0.0
+    # empty session: stats are absent (None), never a fake zero
+    lat = sess.latency_summary()
+    assert lat["ticks"] == 0 and lat["queries"] == 0
+    assert lat["qps"] is None
+    assert lat["p50_us"] is None
+    assert lat["p95_us"] is None and lat["p99_us"] is None
+
+
+def test_query_session_warmup_excluded_from_latency():
+    idx, _ = _single_doc_index()
+    sess = QuerySession(idx, batch_size=4)
+    warmed = sess.warmup(pattern_lens=(4, 8))
+    assert warmed == 2
+    lat = sess.latency_summary()
+    # warmup ticks (the JIT-compile ticks) never enter the percentiles
+    assert lat["warmup_ticks"] == 2
+    assert lat["ticks"] == 0 and lat["p99_us"] is None
+    sess.count([[0, 1]])
+    lat = sess.latency_summary()
+    assert lat["ticks"] == 1 and lat["p99_us"] is not None
+    sess.reset_latency()
+    assert sess.latency_summary()["warmup_ticks"] == 0
+
+
+def test_query_session_submit_routes_through_server():
+    idx, _ = _single_doc_index()
+    with QuerySession(idx, batch_size=4) as sess:
+        assert sess.server is None
+        futs = [sess.submit([0, 1]), sess.submit([3, 3, 3, 3])]
+        got = [f.result(timeout=30.0) for f in futs]
+        assert sess.server is not None
+        assert got[0].ok and got[0].count == idx.count([0, 1])
+        assert got[1].ok and got[1].count == idx.count([3, 3, 3, 3])
+        # server knobs are constructor-time only: rejected once running
+        with pytest.raises(ValueError, match="knobs"):
+            sess.submit([0], queue_depth=2)
+    assert sess.server is None      # close() on context exit

@@ -1,0 +1,47 @@
+"""Admission control decisions — pure logic, plain numbers."""
+import pytest
+
+from repro.serve import AdmissionController, POLICIES
+
+
+def test_none_policy_accepts_everything():
+    a = AdmissionController(queue_depth=1, policy="none")
+    d = a.admit(queued=10**6, oldest_age_us=10**9)
+    assert d.action == "accept" and d.accepted
+    assert d.retry_after_us is None
+
+
+def test_reject_at_queue_depth_with_priced_retry_hint():
+    a = AdmissionController(queue_depth=4, policy="reject")
+    assert a.admit(3, 0.0).action == "accept"
+    d = a.admit(4, 0.0, est_us_per_req=250.0)
+    assert d.action == "reject" and not d.accepted
+    # hint = backlog x measured per-request cost
+    assert d.retry_after_us == pytest.approx(4 * 250.0)
+
+
+def test_reject_hint_floors_without_service_estimate():
+    a = AdmissionController(queue_depth=1, policy="reject")
+    assert a.admit(1, 0.0).retry_after_us == pytest.approx(1.0)
+    assert a.admit(0, 10.0, None).action == "accept"
+
+
+def test_age_bound_trips_even_below_depth():
+    a = AdmissionController(queue_depth=1024, policy="reject",
+                            max_age_us=1000.0)
+    assert a.admit(1, 999.0).action == "accept"
+    assert a.admit(1, 1001.0).action == "reject"
+
+
+def test_shed_policy_admits_by_evicting():
+    a = AdmissionController(queue_depth=2, policy="shed")
+    d = a.admit(2, 0.0)
+    assert d.action == "shed" and d.accepted
+
+
+def test_validation():
+    assert set(POLICIES) == {"none", "reject", "shed"}
+    with pytest.raises(ValueError, match="policy"):
+        AdmissionController(policy="drop")
+    with pytest.raises(ValueError, match="queue_depth"):
+        AdmissionController(queue_depth=0)

@@ -1,0 +1,103 @@
+"""Coalescer window logic under adversarial arrivals — driven with a
+purely virtual clock (the class takes `now` everywhere, so no sleeps)."""
+import numpy as np
+import pytest
+
+from repro.serve import Coalescer, PendingQuery
+
+WAIT_US = 500.0
+WAIT_S = WAIT_US * 1e-6
+
+
+def _req(rid, length, t):
+    return PendingQuery(req_id=rid, pattern=np.zeros(length, np.int64),
+                        t_arrival=t)
+
+
+def test_straggler_flushes_at_max_wait_never_stranded():
+    c = Coalescer(max_batch=64, max_wait_us=WAIT_US)
+    c.add(_req(0, 8, t=0.0))
+    # before the deadline the window stays open ...
+    assert c.pop_ready(WAIT_S * 0.99) == []
+    assert c.pending_count() == 1
+    # ... at the deadline the lone straggler goes out alone
+    [batch] = c.pop_ready(WAIT_S)
+    assert [r.req_id for r in batch] == [0]
+    assert c.pending_count() == 0
+    assert c.next_deadline() is None
+
+
+def test_younger_requests_ride_the_oldest_deadline():
+    c = Coalescer(max_batch=64, max_wait_us=WAIT_US)
+    c.add(_req(0, 8, t=0.0))
+    c.add(_req(1, 8, t=WAIT_S * 0.9))       # 10% of its wait budget spent
+    [batch] = c.pop_ready(WAIT_S)
+    assert [r.req_id for r in batch] == [0, 1]   # arrival order preserved
+
+
+def test_burst_larger_than_biggest_bucket_splits_into_full_chunks():
+    c = Coalescer(max_batch=16, max_wait_us=WAIT_US)
+    for i in range(41):                      # 2 full chunks + 9 remainder
+        c.add(_req(i, 8, t=0.0))
+    batches = c.pop_ready(0.0)               # full windows close instantly
+    assert [len(b) for b in batches] == [16, 16]
+    assert [r.req_id for r in batches[0]] == list(range(16))
+    assert c.pending_count() == 9            # remainder keeps pending ...
+    [rest] = c.pop_ready(WAIT_S)             # ... until ITS deadline
+    assert [r.req_id for r in rest] == list(range(32, 41))
+
+
+def test_mixed_lengths_coalesce_into_distinct_buckets_same_window():
+    c = Coalescer(max_batch=64, max_wait_us=WAIT_US)
+    c.add(_req(0, 4, t=0.0))        # -> 8-bucket (floor)
+    c.add(_req(1, 100, t=0.0))      # -> 128-bucket
+    c.add(_req(2, 8, t=0.0))        # -> 8-bucket again
+    batches = c.pop_ready(WAIT_S)
+    assert sorted(len(b) for b in batches) == [1, 2]
+    for b in batches:
+        assert len({r.len_bucket for r in b}) == 1   # homogeneous shapes
+    assert {r.req_id for b in batches for r in b} == {0, 1, 2}
+
+
+def test_full_bucket_closes_without_waiting():
+    c = Coalescer(max_batch=8, max_wait_us=1e9)      # deadline effectively off
+    for i in range(8):
+        c.add(_req(i, 8, t=0.0))
+    [batch] = c.pop_ready(0.0)
+    assert len(batch) == 8
+
+
+def test_flush_closes_every_window_regardless_of_age():
+    c = Coalescer(max_batch=64, max_wait_us=1e9)
+    c.add(_req(0, 8, t=0.0))
+    c.add(_req(1, 100, t=0.0))
+    assert len(c.pop_ready(0.0, flush=True)) == 2
+    assert c.pending_count() == 0
+
+
+def test_shed_oldest_is_global_across_buckets():
+    c = Coalescer(max_batch=64, max_wait_us=WAIT_US)
+    c.add(_req(0, 8, t=2.0))
+    c.add(_req(1, 100, t=1.0))      # older, different bucket
+    victim = c.shed_oldest()
+    assert victim.req_id == 1
+    assert c.pending_count() == 1
+    assert c.shed_oldest().req_id == 0
+    assert c.shed_oldest() is None
+
+
+def test_bookkeeping_age_deadline_and_pow2_coercion():
+    assert Coalescer(max_batch=5).max_batch == 8     # pow2 kernel bucket
+    c = Coalescer(max_batch=64, max_wait_us=WAIT_US)
+    assert c.oldest_age_us(123.0) == 0.0
+    assert c.next_deadline() is None
+    c.add(_req(0, 8, t=1.0))
+    assert c.oldest_age_us(1.0 + 200e-6) == pytest.approx(200.0)
+    assert c.next_deadline() == pytest.approx(1.0 + WAIT_S)
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError):
+        Coalescer(max_batch=0)
+    with pytest.raises(ValueError):
+        Coalescer(max_wait_us=-1.0)

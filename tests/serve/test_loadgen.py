@@ -1,0 +1,77 @@
+"""Arrival processes (deterministic, seeded) + open-loop summary rules."""
+import numpy as np
+import pytest
+
+from repro.api import SuffixArrayIndex
+from repro.serve import (ARRIVALS, Response, SAServer, make_arrivals,
+                         run_open_loop, summarize)
+
+
+@pytest.mark.parametrize("process", ARRIVALS)
+def test_arrivals_are_deterministic_sorted_and_in_range(process):
+    a = make_arrivals(process, 500.0, 0.5, seed=7)
+    b = make_arrivals(process, 500.0, 0.5, seed=7)
+    assert np.array_equal(a, b)              # same seed, same schedule
+    assert np.all(np.diff(a) >= 0)
+    assert a.size > 0 and a[0] >= 0 and a[-1] < 0.5
+
+
+def test_poisson_seed_changes_schedule_and_rate_is_right():
+    a = make_arrivals("poisson", 2000.0, 1.0, seed=0)
+    b = make_arrivals("poisson", 2000.0, 1.0, seed=1)
+    assert not np.array_equal(a, b)
+    assert 1600 < a.size < 2400              # ~qps*duration +/- noise
+
+
+def test_onoff_arrivals_only_inside_on_windows():
+    on_ms, off_ms = 20.0, 80.0
+    a = make_arrivals("onoff", 1000.0, 1.0, seed=0,
+                      on_ms=on_ms, off_ms=off_ms)
+    period = (on_ms + off_ms) * 1e-3
+    assert np.all((a % period) < on_ms * 1e-3)
+    assert 700 < a.size < 1300               # mean rate is still ~qps
+
+
+def test_uniform_is_evenly_spaced():
+    a = make_arrivals("uniform", 100.0, 0.1, seed=0)
+    assert a.size == 10
+    assert np.allclose(np.diff(a), 0.01)
+
+
+def test_arrival_validation():
+    with pytest.raises(ValueError, match="arrival process"):
+        make_arrivals("lognormal", 100.0, 1.0)
+    with pytest.raises(ValueError):
+        make_arrivals("poisson", 0.0, 1.0)
+    with pytest.raises(ValueError):
+        make_arrivals("poisson", 100.0, -1.0)
+
+
+def test_run_open_loop_serves_every_arrival_in_schedule_order():
+    rng = np.random.default_rng(5)
+    idx = SuffixArrayIndex.build(rng.integers(0, 4, 200), sigma=4)
+    pats = [rng.integers(0, 4, 8) for _ in range(5)]
+    with SAServer(idx, max_batch=8, coalesce_max_wait_us=500.0) as srv:
+        srv.warmup(pattern_lens=(8,))
+        arrivals = make_arrivals("uniform", 400.0, 0.1, seed=0)
+        responses = run_open_loop(srv, pats, arrivals, tick_s=0.001)
+    assert len(responses) == arrivals.size
+    assert [r.req_id for r in responses] == sorted(r.req_id
+                                                   for r in responses)
+    for i, r in enumerate(responses):
+        assert r.ok and r.count == idx.count(pats[i % len(pats)])
+    s = summarize(responses, 0.1)
+    assert s["ok"] == len(responses) and s["rejected"] == 0
+    assert s["p50_ms"] <= s["p95_ms"] <= s["p99_ms"] <= s["max_ms"]
+    with pytest.raises(ValueError, match="pattern"):
+        run_open_loop(srv, [], arrivals)
+
+
+def test_summarize_absent_when_nothing_served():
+    rejected = [Response(req_id=i, status="rejected", retry_after_us=5.0)
+                for i in range(4)]
+    s = summarize(rejected, 1.0)
+    assert s["offered"] == 4 and s["rejected"] == 4 and s["ok"] == 0
+    assert s["goodput_qps"] == 0.0
+    assert s["p50_ms"] is None and s["p99_ms"] is None
+    assert s["queue_p99_ms"] is None and s["max_ms"] is None

@@ -1,0 +1,100 @@
+"""Schema gate + findings derivation of the serving SLO benchmark,
+exercised on synthetic records (no load is generated here — the real
+sweep is the CI serve-slo-smoke job)."""
+import copy
+
+from benchmarks.serve_slo import (MODES, derive_findings, validate_artifact)
+
+GRID = [1000.0, 2000.0, 4000.0, 8000.0]
+#: p99 curves per mode over GRID: admission stays bounded, the
+#: no-admission baseline diverges, batch-of-one saturates early
+P99 = {
+    "coalesce+admit": [4.0, 6.0, 10.0, 60.0],
+    "coalesce+none": [4.0, 5.0, 400.0, 2000.0],
+    "batch1+admit": [8.0, 40.0, 50.0, 55.0],
+}
+GOODPUT = {
+    "coalesce+admit": [990.0, 1980.0, 2050.0, 800.0],
+    "coalesce+none": [990.0, 1980.0, 3900.0, 7800.0],
+    "batch1+admit": [990.0, 1100.0, 1050.0, 600.0],
+}
+
+
+def _record(mode, arrival, qps, p99_ms, goodput):
+    ok = int(goodput)
+    return {"mode": mode, "arrival": arrival, "offered_qps": qps,
+            "duration_s": 1.0, "offered": ok + 5, "ok": ok, "rejected": 5,
+            "shed": 0, "goodput_qps": goodput, "p50_ms": p99_ms / 4,
+            "p95_ms": p99_ms / 2, "p99_ms": p99_ms,
+            "queue_p99_ms": p99_ms / 2, "max_ms": p99_ms * 2,
+            "batch_size_mean": 8.0, "bucket_occupancy_mean": 0.5,
+            "counters": {"submitted": ok + 5}}
+
+
+def _artifact():
+    records = [_record(m, "poisson", q, p, g)
+               for m in MODES
+               for q, p, g in zip(GRID, P99[m], GOODPUT[m])]
+    records.append(_record("coalesce+admit", "onoff", GRID[-2], 12.0, 1900.0))
+    return {"bench": "serve_slo", "smoke": False, "n": 1000,
+            "pattern_len": 512, "max_batch": 32, "queue_depth": 64,
+            "seed": 0, "duration_s": 1.0, "capacity_qps": 2000.0,
+            "grid_qps": GRID, "records": records,
+            "findings": derive_findings(records, slo_ms=25.0)}
+
+
+def test_synthetic_artifact_passes_schema():
+    assert validate_artifact(_artifact()) == []
+
+
+def test_findings_read_the_curves_correctly():
+    f = _artifact()["findings"]
+    assert f["slo_ms"] == 25.0
+    # best goodput among points with p99 <= SLO
+    assert f["sustained_qps_at_slo"] == {"coalesce+admit": 2050.0,
+                                         "batch1+admit": 990.0}
+    assert f["coalescing_sustains_higher_qps"] is True
+    # the 2x point (grid[-2]): 10ms bounded vs 400ms diverging
+    assert f["overload_qps"] == GRID[-2]
+    assert f["p99_past_saturation_ms"] == {"coalesce+admit": 10.0,
+                                           "coalesce+none": 400.0}
+    assert f["admission_bounds_p99"] is True
+
+
+def test_findings_catch_an_unbounded_admit_curve():
+    art = _artifact()
+    bad = copy.deepcopy(art["records"])
+    for r in bad:
+        if r["mode"] == "coalesce+admit" and r["offered_qps"] == GRID[-2]:
+            r["p99_ms"] = 390.0              # admission no longer helping
+    assert derive_findings(bad, slo_ms=25.0)["admission_bounds_p99"] is False
+
+
+def test_schema_catches_broken_artifacts():
+    art = _artifact()
+
+    missing = copy.deepcopy(art)
+    del missing["grid_qps"]
+    assert any("grid_qps" in p for p in validate_artifact(missing))
+
+    short = copy.deepcopy(art)
+    short["grid_qps"] = short["grid_qps"][:2]
+    assert any(">= 3 offered points" in p for p in validate_artifact(short))
+
+    no_mode = copy.deepcopy(art)
+    no_mode["records"] = [r for r in no_mode["records"]
+                          if r["mode"] != "batch1+admit"]
+    assert any("batch1+admit" in p for p in validate_artifact(no_mode))
+
+    no_burst = copy.deepcopy(art)
+    no_burst["records"] = [r for r in no_burst["records"]
+                           if r["arrival"] != "onoff"]
+    assert any("onoff" in p for p in validate_artifact(no_burst))
+
+    fake_zero = copy.deepcopy(art)
+    fake_zero["records"][0]["p99_ms"] = None     # served but stats absent
+    assert any("p99 is absent" in p for p in validate_artifact(fake_zero))
+
+    dropped = copy.deepcopy(art)
+    del dropped["records"][0]["queue_p99_ms"]
+    assert any("missing keys" in p for p in validate_artifact(dropped))

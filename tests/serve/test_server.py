@@ -1,0 +1,107 @@
+"""SAServer end-to-end: correctness vs the closed-loop engine, admission
+behaviour under a deliberately stalled window, lifecycle + accounting."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import SuffixArrayIndex
+from repro.serve import SAServer
+
+SIGMA = 4
+
+
+@pytest.fixture(scope="module")
+def index():
+    rng = np.random.default_rng(3)
+    return SuffixArrayIndex.build(rng.integers(0, SIGMA, 400), sigma=SIGMA)
+
+
+def test_served_counts_match_closed_loop_engine(index):
+    rng = np.random.default_rng(4)
+    pats = [rng.integers(0, SIGMA, m) for m in (1, 3, 8, 20, 100)] * 3
+    with SAServer(index, max_batch=4, coalesce_max_wait_us=200.0) as srv:
+        futs = [srv.submit(p) for p in pats]
+        got = [f.result(timeout=60.0) for f in futs]
+    for p, r in zip(pats, got):
+        assert r.ok
+        assert r.count == index.count(p)
+        assert r.hi - r.lo == r.count
+        assert r.queue_us >= 0 and r.service_us > 0
+        assert r.total_us >= r.queue_us
+    # one response per request, ids unique
+    assert len({r.req_id for r in got}) == len(pats)
+
+
+def test_queue_full_rejects_with_retry_hint(index):
+    # a 10s window + queue_depth=2 makes the 3rd submit deterministic:
+    # nothing can drain before it arrives
+    srv = SAServer(index, max_batch=64, coalesce_max_wait_us=10e6,
+                   queue_depth=2, overload_policy="reject").start()
+    f1, f2 = srv.submit([0, 1]), srv.submit([1, 0])
+    f3 = srv.submit([0, 0])
+    r3 = f3.result(timeout=5.0)              # resolved immediately
+    assert r3.status == "rejected" and not r3.ok
+    assert r3.retry_after_us >= 1.0
+    assert r3.count is None
+    srv.stop()                               # drains the accepted two
+    assert f1.result(timeout=5.0).ok and f2.result(timeout=5.0).ok
+    c = srv.metrics.counters()
+    assert c["submitted"] == 3 and c["accepted"] == 2
+    assert c["rejected"] == 1 and c["completed"] == 2
+
+
+def test_shed_policy_evicts_the_oldest(index):
+    srv = SAServer(index, max_batch=64, coalesce_max_wait_us=10e6,
+                   queue_depth=1, overload_policy="shed").start()
+    f1 = srv.submit([0, 1])
+    f2 = srv.submit([1, 0])                  # admitted by evicting f1
+    r1 = f1.result(timeout=5.0)
+    assert r1.status == "shed" and r1.total_us >= 0
+    srv.stop()
+    assert f2.result(timeout=5.0).ok
+    assert srv.metrics.counter("shed") == 1
+
+
+def test_scheduled_arrival_charges_loadgen_lateness(index):
+    with SAServer(index, max_batch=4, coalesce_max_wait_us=100.0) as srv:
+        fut = srv.submit([0, 1], t_arrival=time.perf_counter() - 1.0)
+        r = fut.result(timeout=30.0)
+    assert r.ok and r.total_us >= 1e6        # the fictitious second counts
+
+
+def test_submit_validates_synchronously(index):
+    srv = SAServer(index)
+    with pytest.raises(RuntimeError, match="not running"):
+        srv.submit([0])
+    srv.start()
+    try:
+        with pytest.raises(ValueError):
+            srv.submit([SIGMA])              # out of alphabet
+        # empty pattern is legal and matches everywhere, same as the
+        # closed-loop engine's count([])
+        assert srv.submit([]).result(timeout=30.0).count == index.n
+    finally:
+        srv.stop()
+
+
+def test_warmup_counts_every_shape(index):
+    srv = SAServer(index, max_batch=4)
+    # pow2 batch buckets {1,2,4} x length buckets {8,16} = 6 shapes
+    assert srv.warmup(pattern_lens=(5, 16)) == 6
+    assert srv.warmed_shapes == 6
+    assert srv.warmup(pattern_lens=(8,), batch_buckets=(2,)) == 1
+
+
+def test_metrics_snapshot_absent_not_zero(index):
+    srv = SAServer(index)
+    snap = srv.metrics.snapshot()
+    assert snap["counters"]["submitted"] == 0
+    assert snap["total_us"]["count"] == 0
+    assert snap["total_us"]["p99"] is None   # absent, never 0.0
+    with SAServer(index, coalesce_max_wait_us=100.0) as srv2:
+        srv2.submit([0, 1]).result(timeout=30.0)
+    snap = srv2.metrics.snapshot()
+    assert snap["total_us"]["p99"] is not None
+    assert snap["batch_size"]["count"] == 1
+    assert 0 < snap["bucket_occupancy"]["max"] <= 1.0
