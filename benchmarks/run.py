@@ -17,16 +17,17 @@ def main(argv=None) -> None:
                          "under results/; skipped by default)")
     args = ap.parse_args(argv)
     from . import (bsp_throughput, kernels_bench, query_throughput, roofline,
-                   sa_throughput, serve_slo, supersteps, table1_example,
-                   table2_covers, table3_rounds)
+                   sa_throughput, segments_bench, serve_slo, supersteps,
+                   table1_example, table2_covers, table3_rounds)
     mods = [table1_example, table2_covers, table3_rounds, supersteps,
-            sa_throughput, query_throughput, kernels_bench,
+            sa_throughput, query_throughput, segments_bench, kernels_bench,
             bsp_throughput, serve_slo]
     if args.roofline:
         mods.insert(mods.index(bsp_throughput), roofline)
     # the harness runs the distributed + serving benches in smoke mode
     # (full grids are dedicated runs of those modules)
     modargs = {bsp_throughput: ["--smoke", "--out", ""],
+               segments_bench: ["--smoke", "--out", ""],
                serve_slo: ["--smoke", "--out", ""]}
     failed = []
     for m in mods:

@@ -1,0 +1,178 @@
+"""Segmented serving: ingest cost and query overhead vs segment count.
+
+`benchmarks/query_throughput` records how fast a *static* index answers;
+this one records what segmentation buys and what it costs. Two tables:
+
+* **ingest** — stream documents into an already-built corpus. The
+  monolithic row re-indexes the whole corpus per ingest (the only move a
+  single `SuffixArrayIndex` has); the segmented row builds ONE small
+  segment (`SegmentedIndex.add_docs`). Each record carries the builder
+  traffic (cache hits+misses delta) alongside wall time, so the
+  "one build per ingest" claim is measured, not asserted.
+* **query** — `count_batch` latency on the same corpus sliced into 1, 4,
+  … segments. The fan-out runs one jitted `_ranges_kernel` call per
+  segment, so this is the price of the merge; each record carries its
+  overhead ratio vs the single-segment row.
+
+    PYTHONPATH=src python -m benchmarks.segments_bench [--smoke] [--out PATH]
+"""
+import argparse
+import json
+import platform
+import sys
+
+import numpy as np
+
+from repro.api import (SAOptions, SegmentedIndex, SuffixArrayIndex,
+                       builder_cache_stats, clear_query_cache, encode_docs)
+
+from .bench_util import emit, time_call
+
+DOC_LEN = 20_000
+N_DOCS = 8
+N_INGESTS = 3
+SEGMENT_COUNTS = (1, 2, 4, 8)
+BATCH = 64
+PATTERN_LEN = 16
+
+
+def _builds() -> int:
+    s = builder_cache_stats()
+    return s["hits"] + s["misses"]
+
+
+def make_docs(rng, n_docs: int, doc_len: int) -> list:
+    return [rng.integers(0, 256, size=doc_len) for _ in range(n_docs)]
+
+
+def make_patterns(rng, docs, batch: int, m: int) -> list:
+    pats = []
+    for q in range(batch):
+        if q % 2 == 0:
+            d = docs[int(rng.integers(0, len(docs)))]
+            at = int(rng.integers(0, len(d) - m))
+            pats.append(d[at:at + m])
+        else:
+            pats.append(rng.integers(0, 256, size=m))
+    return pats
+
+
+def bench_ingest(records, rng, doc_len: int, n_docs: int, n_ingests: int):
+    docs = make_docs(rng, n_docs, doc_len)
+    new = make_docs(rng, n_ingests, doc_len // 4)
+    opts = SAOptions()
+
+    # monolithic: every ingest re-encodes and rebuilds the whole corpus
+    corpus = list(docs)
+    t_mono, builds_mono = [], 0
+    for d in new:
+        corpus.append(d)
+        before = _builds()
+        us = time_call(lambda: SuffixArrayIndex.build(
+            encode_docs(corpus)[0], opts), warmup=0, iters=1)
+        builds_mono += _builds() - before
+        t_mono.append(us)
+    us_mono = float(np.median(t_mono))
+    emit(f"segments_bench/ingest/monolithic/n_docs={n_docs}", us_mono,
+         f"builds_per_ingest={builds_mono / n_ingests:.1f}")
+    records.append({"table": "ingest", "path": "monolithic",
+                    "n_docs": n_docs, "doc_len": doc_len,
+                    "us_per_ingest": round(us_mono, 1),
+                    "builds_per_ingest": builds_mono / n_ingests})
+
+    # segmented: one small segment build per ingest (no compaction here —
+    # the amortized-merge cost is its own record below)
+    seg = SegmentedIndex.from_docs(docs, opts, sigma=256, segment_docs=1)
+    t_seg, builds_seg = [], 0
+    for d in new:
+        before = _builds()
+        us = time_call(lambda: seg.add_docs([d], compact=False),
+                       warmup=0, iters=1)
+        builds_seg += _builds() - before
+        t_seg.append(us)
+    us_seg = float(np.median(t_seg))
+    emit(f"segments_bench/ingest/segmented/n_docs={n_docs}", us_seg,
+         f"builds_per_ingest={builds_seg / n_ingests:.1f}"
+         f";speedup={us_mono / us_seg:.1f}x")
+    records.append({"table": "ingest", "path": "segmented",
+                    "n_docs": n_docs, "doc_len": doc_len,
+                    "us_per_ingest": round(us_seg, 1),
+                    "builds_per_ingest": builds_seg / n_ingests,
+                    "speedup_vs_monolithic": round(us_mono / us_seg, 2)})
+    assert builds_seg == n_ingests, (builds_seg, n_ingests)
+
+    # the deferred merge: one compact() over everything ingested above
+    before = _builds()
+    us_c = time_call(seg.compact, warmup=0, iters=1)
+    emit(f"segments_bench/ingest/compact/n_docs={n_docs}", us_c,
+         f"merge_builds={_builds() - before}")
+    records.append({"table": "ingest", "path": "compact",
+                    "n_docs": n_docs, "doc_len": doc_len,
+                    "us": round(us_c, 1),
+                    "merge_builds": _builds() - before})
+    return docs
+
+
+def bench_query(records, rng, docs, segment_counts, batch: int, m: int,
+                iters: int):
+    pats = make_patterns(rng, docs, batch, m)
+    opts = SAOptions()
+    base_us = None
+    for s in segment_counts:
+        per = max(-(-len(docs) // s), 1)
+        seg = SegmentedIndex.from_docs(docs, opts, sigma=256,
+                                       segment_docs=per)
+        clear_query_cache()
+        want = seg.count_batch(pats)
+        us = time_call(lambda: seg.count_batch(pats), iters=iters)
+        if base_us is None:
+            base_us = us
+            base_counts = want
+        else:                                     # fan-out answers identically
+            assert np.array_equal(want, base_counts), s
+        overhead = us / base_us
+        emit(f"segments_bench/query/segments={seg.n_segments}/b={batch}", us,
+             f"patterns_s={batch / us * 1e6:.0f};overhead={overhead:.2f}x")
+        records.append({"table": "query", "segments": seg.n_segments,
+                        "batch": batch, "m": m, "us": round(us, 1),
+                        "patterns_per_s": round(batch / us * 1e6, 1),
+                        "overhead_vs_one_segment": round(overhead, 2)})
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_segments.json",
+                    help="JSON artifact path ('' disables)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small docs, fewer cells (CI gate: proves one "
+                         "build per ingest and fan-out/monolithic parity)")
+    args = ap.parse_args(argv)
+
+    doc_len = 2_000 if args.smoke else DOC_LEN
+    n_docs = 4 if args.smoke else N_DOCS
+    n_ingests = 2 if args.smoke else N_INGESTS
+    seg_counts = (1, 4) if args.smoke else SEGMENT_COUNTS
+    iters = 1 if args.smoke else 3
+
+    rng = np.random.default_rng(0)
+    records = []
+    print("# segments_bench: ingest builder traffic + query fan-out overhead")
+    docs = bench_ingest(records, rng, doc_len, n_docs, n_ingests)
+    bench_query(records, rng, docs, seg_counts, BATCH, PATTERN_LEN, iters)
+
+    if args.out:
+        artifact = {
+            "bench": "segments_bench",
+            "python": sys.version.split()[0],
+            "machine": platform.machine(),
+            "smoke": bool(args.smoke),
+            "records": records,
+        }
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=1)
+        print(f"# wrote {args.out} ({len(records)} records)")
+    return records
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,8 @@ reference / naive ground truth.
 """
 import numpy as np
 
-from repro.api import (SAOptions, SuffixArrayIndex, build_suffix_array,
+from repro.api import (SAOptions, SegmentedIndex, SuffixArrayIndex,
+                       build_suffix_array, builder_cache_stats,
                        registered_backends)
 from repro.core.seq_ref import SeqStats
 
@@ -58,6 +59,23 @@ def main():
     leaks = corpus.cross_doc_duplicates(min_len=64)
     print(f"cross-doc repeats ≥ 64 chars: {len(leaks)} "
           f"(docs {sorted(set((i, j) for i, j, _ in leaks))})")
+
+    # ingest without rebuilding the corpus: a SegmentedIndex answers the
+    # same queries, but a document change rebuilds ONE small segment
+    seg = SegmentedIndex.from_docs(docs, SAOptions(backend="seq"),
+                                   segment_docs=1)
+    before = builder_cache_stats()
+    new_id, = seg.add_docs([rng.integers(0, 4, 200)])
+    after = builder_cache_stats()
+    builds = (after["hits"] + after["misses"]
+              - before["hits"] - before["misses"])
+    print(f"ingested doc {new_id}: {builds} segment build, "
+          f"{seg.n_segments} segments over {seg.n_docs} docs")
+    assert builds == 1
+    pat = docs[2][40:48]                      # inside the planted overlap
+    assert seg.count(pat) >= int(corpus.count_batch([pat])[0]) >= 2
+    rows = seg.locate(pat)                    # global (doc, offset) rows
+    print(f"pattern found in docs {sorted(set(rows[:, 0].tolist()))}")
 
 
 if __name__ == "__main__":

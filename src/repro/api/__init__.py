@@ -61,6 +61,16 @@ Three layers
    instead of rebuilding (`SuffixArrayIndex.save` / `.load` are the
    single-artifact conveniences).
 
+5. **Segmented serving** (`segments` + `SegmentedIndexStore`): a
+   `SegmentedIndex` splits the corpus into independently-built segments
+   so ingesting or deleting a document rebuilds ONE small segment instead
+   of the corpus; queries fan a batch across segments through the same
+   jitted range kernel and merge counts/locations back to global document
+   coordinates, and size-tiered compaction bounds the fan-out.
+   `SegmentedIndexStore` persists each segment under its own versioned
+   checkpoint plus an atomically-replaced corpus manifest — an ingest
+   syncs exactly one segment to disk.
+
 Quickstart
 ----------
 >>> import numpy as np
@@ -80,13 +90,17 @@ from .query import (QueryBatch, QuerySession, clear_query_cache,
                     query_cache_stats)
 from .registry import (SuffixArrayBuilder, get_backend, register_backend,
                        registered_backends)
-from .store import (IndexStore, StaleIndexError, corpus_fingerprint,
-                    load_index, save_index)
+from .segments import Segment, SegmentedIndex
+from .store import (IndexStore, SegmentedIndexStore, StaleIndexError,
+                    corpus_fingerprint, load_index, save_index)
 
 __all__ = [
     "SAOptions",
     "SCHEDULES",
     "SORT_IMPLS",
+    "Segment",
+    "SegmentedIndex",
+    "SegmentedIndexStore",
     "SuffixArrayBuilder",
     "SuffixArrayIndex",
     "NgramStats",

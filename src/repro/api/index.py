@@ -40,7 +40,7 @@ import numpy as np
 from ..text.lcp import lcp_kasai, repeated_substring_spans
 from .build import build_suffix_array
 from .options import SAOptions
-from .query import QueryBatch, batch_ranges
+from .query import QueryBatch, batch_ranges, stage_batch
 
 
 def encode_docs(docs) -> tuple[np.ndarray, np.ndarray, int]:
@@ -333,6 +333,37 @@ class SuffixArrayIndex:
         lo, hi = batch_ranges(self, qb)
         return [np.sort(self.sa[l:h].astype(np.int64))
                 for l, h in zip(lo, hi)]
+
+    def locate_docs_batch(self, patterns) -> list:
+        """Occurrences in **document coordinates**: one int64[k, 2] array
+        of (doc, in-doc offset) rows per pattern, sorted
+        lexicographically. This is the representation shared with
+        `repro.api.SegmentedIndex.locate_batch` — the segment-merge
+        property tests compare the two byte-for-byte (encoded positions
+        are ascending exactly when (doc, offset) rows are lex-sorted,
+        since doc_starts is increasing)."""
+        out = []
+        for pos in self.locate_batch(patterns):
+            doc, off = self.doc_offset(pos)
+            out.append(np.stack([np.asarray(doc, np.int64).ravel(),
+                                 np.asarray(off, np.int64).ravel()], axis=1)
+                       if len(pos) else np.zeros((0, 2), np.int64))
+        return out
+
+    # ------------------------------------------------- serving-tier protocol
+    def stage_encoded(self, enc):
+        """Package already-encoded patterns (`_encode_pattern` output) for
+        the serving tier and begin their host→device transfer. Returns an
+        opaque work item for `ranges_staged` — `repro.serve.SAServer`
+        double-buffers the pair, and `SegmentedIndex` implements the same
+        two methods with a per-segment fan-out inside."""
+        batch = QueryBatch.from_encoded(self, enc)
+        return (batch, stage_batch(self, batch) if self.n else None)
+
+    def ranges_staged(self, work) -> tuple[np.ndarray, np.ndarray]:
+        """Resolve a `stage_encoded` work item to its (lo, hi) SA ranges."""
+        batch, staged = work
+        return batch_ranges(self, batch, staged=staged)
 
     # ----------------------------------------------------- scalar shims
     def count(self, pattern) -> int:

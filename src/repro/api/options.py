@@ -77,6 +77,17 @@ class SAOptions:
     counters:       ``repro.bsp.counters.BSPCounters`` sink (BSP backend).
     stats:          ``repro.core.seq_ref.SeqStats`` sink (seq backend).
     validate:       check input values are non-negative ints before building.
+    segment_docs:   default documents-per-segment for
+                    `repro.api.SegmentedIndex.from_docs` (``None`` = one
+                    segment, the monolithic layout). A *serving-layer*
+                    knob: it shapes how the corpus is sliced, never the
+                    per-segment suffix arrays themselves, so it is
+                    excluded from `fingerprint()` — persisted segments
+                    stay valid however future ingests are chunked.
+    compact_fanin:  size-tiered compaction trigger for `SegmentedIndex`:
+                    merge whenever this many segments share a size tier
+                    (sizes within one power of the fanin). Also excluded
+                    from `fingerprint()` for the same reason.
     """
 
     backend: str = AUTO
@@ -91,6 +102,8 @@ class SAOptions:
     counters: Any = None
     stats: Any = None
     validate: bool = True
+    segment_docs: int | None = None
+    compact_fanin: int = 4
 
     def __post_init__(self):
         if isinstance(self.schedule, str) and self.schedule not in SCHEDULES:
@@ -102,6 +115,12 @@ class SAOptions:
         if self.sort_impl not in SORT_IMPLS:
             raise ValueError(f"unknown sort_impl {self.sort_impl!r}; "
                              f"expected one of {SORT_IMPLS}")
+        if self.segment_docs is not None and self.segment_docs < 1:
+            raise ValueError(
+                f"segment_docs must be ≥ 1, got {self.segment_docs}")
+        if self.compact_fanin < 2:
+            raise ValueError(
+                f"compact_fanin must be ≥ 2, got {self.compact_fanin}")
 
     @property
     def schedule_fn(self) -> Callable[[int, int, int], int]:
@@ -120,8 +139,11 @@ class SAOptions:
 
         Covers the fields that *describe* the build (backend spelling, v0,
         schedule, base_threshold, sort_impl, pack_keys) and deliberately
-        excludes runtime objects (mesh, counters/stats sinks) and
-        execution-only knobs (cache, validate): every correct backend
+        excludes runtime objects (mesh, counters/stats sinks),
+        execution-only knobs (cache, validate), and serving-layer
+        segmentation knobs (segment_docs, compact_fanin — they shape how
+        a corpus is sliced into segments, never the per-segment suffix
+        array): every correct backend
         produces the identical suffix array, so a persisted index
         (`repro.api.store.IndexStore`) stays valid across process
         restarts, device counts, and instrumentation changes — but is

@@ -265,7 +265,10 @@ class QuerySession:
     """Serving facade: batched query ticks + latency accounting.
 
     Wraps one `SuffixArrayIndex` (built locally or restored from an
-    `IndexStore`) and exposes the batch API in serving shape: an incoming
+    `IndexStore`) — or a `repro.api.SegmentedIndex`, whose `count_batch`
+    fans each tick across segments and merges (locate then yields global
+    (doc, offset) rows) — and exposes the batch API in serving shape: an
+    incoming
     sequence of patterns is chopped into ticks of at most `batch_size`,
     each tick runs through the jitted batched path as one device call, and
     the wall time of every tick is recorded. `latency_summary()` reports

@@ -33,12 +33,20 @@ Staleness is an *error type*, not a boolean: `load_index` raises
 `IndexStore.get_or_build` catches it (and `FileNotFoundError`) to fall
 back to a fresh build + save, reporting ``"hit" | "miss" | "stale"`` the
 way `repro.api.build.builder_cache_stats` reports builder-cache traffic.
+
+`SegmentedIndexStore` lifts the same contract to multi-segment corpora
+(`repro.api.SegmentedIndex`): one versioned checkpoint per segment plus
+an atomically-replaced corpus-level manifest, with **incremental** sync —
+an ingest persists exactly the one new segment.
 """
 from __future__ import annotations
 
 import hashlib
 import json
 import os
+import re
+import shutil
+import threading
 import time
 from typing import Callable
 
@@ -47,11 +55,17 @@ import numpy as np
 from ..ckpt.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from .index import SuffixArrayIndex
 from .options import SAOptions
+from .segments import Segment, SegmentedIndex
 
 #: bump when the on-disk layout or manifest fields change incompatibly.
 FORMAT_VERSION = 1
 
+#: corpus-level manifest version for segmented entries (independent of the
+#: per-segment checkpoint format above).
+SEG_FORMAT_VERSION = 1
+
 _KIND = "suffix-array-index"
+_SEG_KIND = "segmented-suffix-array-index"
 
 
 class StaleIndexError(RuntimeError):
@@ -81,11 +95,14 @@ def _index_tree(index: SuffixArrayIndex) -> dict:
     return tree
 
 
-def save_index(path: str, index: SuffixArrayIndex) -> str:
-    """Persist `index` under `path` (one committed step_00000000 entry).
+def save_index(path: str, index: SuffixArrayIndex, *, step: int = 0) -> str:
+    """Persist `index` under `path` (one committed step_<step> entry).
 
     Returns `path`. The LCP array is included only if it was already
-    computed — saving never forces the Kasai pass.
+    computed — saving never forces the Kasai pass. `step` versions the
+    checkpoint: `load_index` restores the latest committed step, and
+    `SegmentedIndexStore` bumps it on every re-save so a rolled-back
+    segment is detectable against the corpus manifest.
     """
     opts = index.options
     extras = {
@@ -112,7 +129,7 @@ def save_index(path: str, index: SuffixArrayIndex) -> str:
         "corpus_sha256": corpus_fingerprint(index.text),
         "created_unix": time.time(),
     }
-    save_checkpoint(path, 0, _index_tree(index), extras=extras)
+    save_checkpoint(path, int(step), _index_tree(index), extras=extras)
     return path
 
 
@@ -126,14 +143,17 @@ def _read_manifest(path: str, step: int) -> dict:
 
 
 def load_index(path: str, *, options: SAOptions | None = None,
-               expect_corpus_sha: str | None = None) -> SuffixArrayIndex:
+               expect_corpus_sha: str | None = None,
+               expect_step: int | None = None) -> SuffixArrayIndex:
     """Restore a `SuffixArrayIndex` persisted by `save_index`.
 
     Raises `FileNotFoundError` when no committed entry exists, and
     `StaleIndexError` when one exists but fails a staleness check:
     unknown format version, `options.fingerprint()` mismatch (pass
-    ``options`` to enforce the plan), or `expect_corpus_sha` mismatch
-    (pass the current corpus hash to enforce content identity). Leaf
+    ``options`` to enforce the plan), `expect_corpus_sha` mismatch
+    (pass the current corpus hash to enforce content identity), or a
+    latest committed step other than `expect_step` (how the segmented
+    store detects a rolled-back or partially-synced segment). Leaf
     shapes/dtypes are validated by `repro.ckpt.checkpoint
     .restore_checkpoint` against the manifest, so a truncated or
     hand-edited `arrays.npz` raises instead of restoring garbage.
@@ -141,6 +161,10 @@ def load_index(path: str, *, options: SAOptions | None = None,
     step = latest_step(path)
     if step is None:
         raise FileNotFoundError(f"no committed index entry under {path!r}")
+    if expect_step is not None and step != expect_step:
+        raise StaleIndexError(
+            f"index at {path!r} is at step {step}, expected {expect_step} "
+            f"— rolled back or partially synced")
     manifest = _read_manifest(path, step)
     extras = manifest.get("extras", {})
     if extras.get("kind") != _KIND:
@@ -212,9 +236,24 @@ class IndexStore:
     check); both non-hits build via `build_fn` and persist the result.
     """
 
+    #: get_or_build status → stats counter key
+    _STATUS_KEY = {"hit": "hits", "miss": "misses", "stale": "stale"}
+
     def __init__(self, root: str):
         self.root = str(root)
         self._stats = {"hits": 0, "misses": 0, "stale": 0}
+        self._stats_lock = threading.Lock()
+
+    def _record(self, status: str) -> None:
+        """Count one *completed* get_or_build outcome.
+
+        Called only when the (index, status) pair is actually being
+        returned, under a lock: a build_fn that raises must not leave a
+        phantom miss/stale behind, and concurrent sessions must not lose
+        increments — `stats()` is the serving-side "did the restart skip
+        the build" metric, so it has to be exact."""
+        with self._stats_lock:
+            self._stats[self._STATUS_KEY[status]] += 1
 
     def path(self, name: str) -> str:
         if not name or os.sep in name or name.startswith("."):
@@ -259,25 +298,248 @@ class IndexStore:
         "stale"}. On a hit the builder never runs —
         `repro.api.build.builder_cache_stats` stays at zero builds, which
         is exactly what the warm-restart test asserts.
+
+        Stats are updated atomically with the returned index (under a
+        lock, only once the non-hit path has actually built AND
+        persisted): a `build_fn` that raises on the stale-then-rebuild
+        path propagates the exception and leaves `stats()` untouched,
+        instead of recording a rebuild that never happened
+        (`tests/api/test_store.py::test_get_or_build_stats_are_atomic`).
         """
         try:
             index = self.load(name, options=options,
                               expect_corpus_sha=corpus_sha)
-            self._stats["hits"] += 1
-            return index, "hit"
+            status = "hit"
         except FileNotFoundError:
-            status = "miss"
-            self._stats["misses"] += 1
+            index, status = None, "miss"
         except StaleIndexError:
-            status = "stale"
-            self._stats["stale"] += 1
-        index = build_fn()
-        self.save(name, index)
+            index, status = None, "stale"
+        if index is None:
+            index = build_fn()
+            self.save(name, index)
+        self._record(status)
         return index, status
 
     def stats(self) -> dict:
         """Traffic snapshot: entries on disk + hits/misses/stale so far."""
-        return {"entries": len(self.entries()), **self._stats}
+        with self._stats_lock:
+            counts = dict(self._stats)
+        return {"entries": len(self.entries()), **counts}
 
     def __repr__(self) -> str:
         return f"IndexStore(root={self.root!r}, stats={self.stats()})"
+
+
+# ---------------------------------------------------------------------------
+# segmented persistence
+# ---------------------------------------------------------------------------
+_SEG_ID_RE = re.compile(r"^seg-\d{6,}$")
+
+
+class SegmentedIndexStore:
+    """Persist a `repro.api.SegmentedIndex`: one versioned checkpoint per
+    segment plus a corpus-level manifest — ingest persists one small
+    segment, never the corpus.
+
+    Layout (one directory per named entry)::
+
+        <root>/<name>/
+            corpus.json              — corpus-level manifest (atomic write)
+            segments/<seg_id>/       — one `save_index` checkpoint each
+                step_<version>/{arrays.npz, manifest.json, COMMITTED}
+
+    ``corpus.json`` pins the corpus: the segment list with each segment's
+    global doc ids, checkpoint step, encoded length, and corpus sha. A
+    segment whose latest committed step, content hash, or length disagrees
+    with the manifest loads as `StaleIndexError` (rolled back, tampered,
+    or half-synced), never as silently wrong query results.
+
+    `save` is **incremental**: only segments marked dirty on the
+    `SegmentedIndex` (new since the last sync) are written, and segments
+    dropped by delete/compaction are garbage-collected — the returned
+    traffic dict is what `tests/api/test_segments.py` uses to prove a
+    single-doc ingest persists exactly one segment.
+    """
+
+    _STATUS_KEY = IndexStore._STATUS_KEY
+
+    def __init__(self, root: str):
+        self.root = str(root)
+        self._stats = {"hits": 0, "misses": 0, "stale": 0,
+                       "segments_written": 0, "segments_deleted": 0,
+                       "segments_loaded": 0}
+        self._stats_lock = threading.Lock()
+
+    def path(self, name: str) -> str:
+        if not name or os.sep in name or name.startswith("."):
+            raise ValueError(f"invalid index entry name {name!r}")
+        return os.path.join(self.root, name)
+
+    def _manifest_path(self, name: str) -> str:
+        return os.path.join(self.path(name), "corpus.json")
+
+    def _segment_path(self, name: str, seg_id: str) -> str:
+        if not _SEG_ID_RE.match(seg_id):
+            raise StaleIndexError(f"invalid segment id {seg_id!r} in "
+                                  f"entry {name!r}")
+        return os.path.join(self.path(name), "segments", seg_id)
+
+    def entries(self) -> list[str]:
+        """Names with a corpus manifest, sorted."""
+        if not os.path.isdir(self.root):
+            return []
+        return sorted(d for d in os.listdir(self.root)
+                      if os.path.exists(self._manifest_path(d)))
+
+    # ------------------------------------------------------------- persist
+    def save(self, name: str, sidx: SegmentedIndex) -> dict:
+        """Sync `sidx` to disk incrementally; returns the traffic dict
+        ``{"segments_written": w, "segments_deleted": d}``.
+
+        Dirty segments are checkpointed (at the next step when the
+        directory already exists — a versioned re-save, not an
+        overwrite), dropped segments' directories are removed, and the
+        corpus manifest is atomically replaced LAST, so a crash mid-sync
+        leaves the previous manifest pointing at fully-committed
+        segments."""
+        written = deleted = 0
+        for seg in sidx.segments:
+            spath = self._segment_path(name, seg.seg_id)
+            if seg.seg_id in sidx.dirty or latest_step(spath) is None:
+                prev = latest_step(spath)
+                seg.version = 0 if prev is None else prev + 1
+                save_index(spath, seg.index, step=seg.version)
+                written += 1
+        for seg_id in sorted(sidx.dropped):
+            spath = self._segment_path(name, seg_id)
+            if os.path.isdir(spath):
+                shutil.rmtree(spath)
+                deleted += 1
+        manifest = {
+            "format": SEG_FORMAT_VERSION,
+            "kind": _SEG_KIND,
+            "options_fingerprint": sidx.options.fingerprint(),
+            "sigma": sidx._sigma,
+            "next_doc_id": sidx._next_doc_id,
+            "next_seg": sidx._next_seg,
+            "segments": [{
+                "seg_id": seg.seg_id,
+                "doc_ids": np.asarray(seg.doc_ids, np.int64).tolist(),
+                "step": seg.version,
+                "n": seg.n,
+                "corpus_sha256": corpus_fingerprint(seg.index.text),
+            } for seg in sidx.segments],
+            "created_unix": time.time(),
+        }
+        os.makedirs(self.path(name), exist_ok=True)
+        tmp = self._manifest_path(name) + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp, self._manifest_path(name))
+        sidx.dirty.clear()
+        sidx.dropped.clear()
+        with self._stats_lock:
+            self._stats["segments_written"] += written
+            self._stats["segments_deleted"] += deleted
+        return {"segments_written": written, "segments_deleted": deleted}
+
+    # ------------------------------------------------------------- restore
+    def load(self, name: str, *,
+             options: SAOptions | None = None) -> SegmentedIndex:
+        """Restore a segmented entry; zero builder traffic.
+
+        Raises `FileNotFoundError` with no manifest, `StaleIndexError`
+        when the manifest is unreadable/wrong-kind/wrong-format, when
+        ``options.fingerprint()`` disagrees, or when any referenced
+        segment is missing, rolled back to a different step, or fails its
+        own content checks."""
+        mpath = self._manifest_path(name)
+        if not os.path.exists(mpath):
+            raise FileNotFoundError(
+                f"no segmented index entry under {self.path(name)!r}")
+        try:
+            with open(mpath) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            raise StaleIndexError(f"unreadable corpus manifest {mpath}: {e}")
+        if manifest.get("kind") != _SEG_KIND:
+            raise StaleIndexError(
+                f"{mpath} is not a segmented index manifest "
+                f"(kind={manifest.get('kind')!r})")
+        if manifest.get("format") != SEG_FORMAT_VERSION:
+            raise StaleIndexError(
+                f"segmented entry {name!r} has format "
+                f"{manifest.get('format')!r}, this code reads "
+                f"{SEG_FORMAT_VERSION} — rebuild it")
+        if options is not None:
+            want, got = options.fingerprint(), \
+                manifest.get("options_fingerprint")
+            if want != got:
+                raise StaleIndexError(
+                    f"segmented entry {name!r} was built with plan {got!r}, "
+                    f"requested {want!r}")
+        segments = []
+        for ent in manifest.get("segments", []):
+            spath = self._segment_path(name, str(ent.get("seg_id", "")))
+            try:
+                index = load_index(
+                    spath, options=options,
+                    expect_corpus_sha=ent.get("corpus_sha256"),
+                    expect_step=int(ent.get("step", 0)))
+            except FileNotFoundError as e:
+                raise StaleIndexError(
+                    f"segmented entry {name!r} references missing segment "
+                    f"{ent.get('seg_id')!r}: {e}")
+            if index.n != int(ent.get("n", -1)):
+                raise StaleIndexError(
+                    f"segment {ent.get('seg_id')!r} of entry {name!r} holds "
+                    f"{index.n} chars, manifest records {ent.get('n')}")
+            segments.append(Segment(
+                seg_id=str(ent["seg_id"]),
+                doc_ids=np.asarray(ent.get("doc_ids", []), np.int64),
+                index=index, version=int(ent.get("step", 0))))
+        opts = options
+        if opts is None:
+            opts = (segments[0].index.options if segments
+                    else SAOptions())
+        sidx = SegmentedIndex(
+            segments, options=opts,
+            sigma=manifest.get("sigma"),
+            next_doc_id=int(manifest.get("next_doc_id", 0)),
+            next_seg=int(manifest.get("next_seg", len(segments))))
+        sidx.dirty.clear()          # just loaded: everything is in sync
+        with self._stats_lock:
+            self._stats["segments_loaded"] += len(segments)
+        return sidx
+
+    def get_or_build(self, name: str,
+                     build_fn: Callable[[], SegmentedIndex], *,
+                     options: SAOptions | None = None,
+                     ) -> tuple[SegmentedIndex, str]:
+        """Restore `name` if fresh, else build + persist. Returns
+        ``(segmented_index, status)``, status in {"hit", "miss",
+        "stale"}; stats update atomically with the successful return,
+        same contract as `IndexStore.get_or_build`."""
+        try:
+            sidx = self.load(name, options=options)
+            status = "hit"
+        except FileNotFoundError:
+            sidx, status = None, "miss"
+        except StaleIndexError:
+            sidx, status = None, "stale"
+        if sidx is None:
+            sidx = build_fn()
+            self.save(name, sidx)
+        with self._stats_lock:
+            self._stats[self._STATUS_KEY[status]] += 1
+        return sidx, status
+
+    def stats(self) -> dict:
+        """Traffic snapshot: entries on disk + hit/miss/stale counts +
+        per-segment write/delete/load traffic since construction."""
+        with self._stats_lock:
+            counts = dict(self._stats)
+        return {"entries": len(self.entries()), **counts}
+
+    def __repr__(self) -> str:
+        return f"SegmentedIndexStore(root={self.root!r}, stats={self.stats()})"

@@ -34,6 +34,15 @@ class SAConfig:
     arrival: str = "poisson"    # open-loop arrival process for serving/
                                 # loadgen ("uniform"|"poisson"|"onoff")
     offered_qps: float = 2000.0  # open-loop offered load for launch/serve
+    # ---- segmented incremental serving (repro.api.SegmentedIndex) ----
+    segments: int = 0           # >0: serve a SegmentedIndex with this many
+                                # segments (docs chunked evenly); 0 = the
+                                # monolithic single-index path
+    ingest: int = 0             # docs ingested through add_docs AFTER the
+                                # initial build (exercises the incremental
+                                # one-segment-per-ingest path in launch/serve)
+    compact_fanin: int = 4      # size-tiered compaction trigger
+                                # (SAOptions.compact_fanin)
 
     def to_options(self, *, mesh=None, counters=None, stats=None):
         """The `repro.api.SAOptions` plan this config describes. Runtime
@@ -46,7 +55,8 @@ class SAConfig:
                          sort_impl=self.sort_impl, cache=self.cache,
                          mesh=mesh, axis=self.axis,
                          pack_keys=self.pack_keys,
-                         counters=counters, stats=stats)
+                         counters=counters, stats=stats,
+                         compact_fanin=self.compact_fanin)
 
 
 CONFIG = SAConfig()

@@ -68,7 +68,9 @@ def serve_sa_queries(cfg, *, n_chars: int, n_docs: int, n_queries: int,
                      arrival: str | None = None,
                      coalesce_max_wait_us: float | None = None,
                      queue_depth: int | None = None,
-                     overload_policy: str | None = None):
+                     overload_policy: str | None = None,
+                     segments: int | None = None,
+                     ingest: int | None = None):
     """Serve substring queries through the asynchronous serving tier.
 
     The index is a persistent artifact: with a `store_dir` (flag or
@@ -79,17 +81,33 @@ def serve_sa_queries(cfg, *, n_chars: int, n_docs: int, n_queries: int,
     (a 1-D mesh over all devices when p > 1, else the vectorised
     single-device DC-v) and is persisted for the next process.
 
+    With ``--segments K`` (or ``cfg.segments``) the corpus is served as a
+    `repro.api.SegmentedIndex` of K segments (persisted through a
+    `SegmentedIndexStore`), and ``--ingest M`` streams M extra documents
+    through `add_docs` AFTER the initial build — each ingest builds one
+    small segment, and with a store each sync writes only the segments
+    that changed (traffic is printed from the store's own accounting).
+
     Traffic is open-loop: `repro.serve.make_arrivals` schedules
     ~`n_queries` seeded arrivals (process/rate from cfg or flags) and a
     `repro.serve.SAServer` coalesces them into pow2 kernel buckets under
     admission control. Kernel-shape compiles are paid in an explicit
     warmup pass first, so the reported percentiles describe steady
     state, never JIT time."""
-    from ..api import (IndexStore, SuffixArrayIndex, builder_cache_stats,
+    from ..api import (IndexStore, SegmentedIndex, SegmentedIndexStore,
+                       SuffixArrayIndex, builder_cache_stats,
                        corpus_fingerprint, encode_docs)
     from ..bsp.counters import BSPCounters
     from ..serve import SAServer, make_arrivals, run_open_loop, summarize
     from .mesh import make_sa_mesh
+
+    n_segments = int(segments if segments is not None
+                     else getattr(cfg, "segments", 0))
+    n_ingest = int(ingest if ingest is not None
+                   else getattr(cfg, "ingest", 0))
+    if n_ingest and not n_segments:
+        raise ValueError("--ingest requires --segments > 0: the monolithic "
+                         "index has no incremental ingest path")
 
     mesh = make_sa_mesh() if len(jax.devices()) > 1 else None
     counters = BSPCounters() if mesh is not None else None
@@ -99,8 +117,25 @@ def serve_sa_queries(cfg, *, n_chars: int, n_docs: int, n_queries: int,
     docs = [rng.integers(0, 256, size=doc_len) for _ in range(n_docs)]
 
     store_dir = store_dir if store_dir is not None else cfg.store_dir
+    store = entry = None
     t0 = time.time()
-    if store_dir:
+    if n_segments > 0:
+        per = max(-(-n_docs // n_segments), 1)      # ceil(docs / segments)
+        if store_dir:
+            store = SegmentedIndexStore(store_dir)
+            entry = f"corpus-n{n_chars}-d{n_docs}-s{seed}-seg{n_segments}"
+            index, status = store.get_or_build(
+                entry,
+                lambda: SegmentedIndex.from_docs(docs, opts, sigma=256,
+                                                 segment_docs=per),
+                options=opts)
+            print(f"segment store: {status} (root={store.root}, "
+                  f"entry={entry}, {store.stats()})")
+        else:
+            status = "off"
+            index = SegmentedIndex.from_docs(docs, opts, sigma=256,
+                                             segment_docs=per)
+    elif store_dir:
         store = IndexStore(store_dir)
         text, _, _ = encode_docs(docs)
         # one entry per corpus configuration, so alternating --smoke/full
@@ -118,9 +153,27 @@ def serve_sa_queries(cfg, *, n_chars: int, n_docs: int, n_queries: int,
         index = SuffixArrayIndex.from_docs(docs, opts, sigma=256)
     build_s = time.time() - t0
     verb = "restored" if status == "hit" else "indexed"
+    seg_note = (f", segments={index.n_segments}"
+                if n_segments > 0 else "")
     print(f"{verb} {index.n} chars / {index.n_docs} docs in {build_s:.2f}s "
-          f"(backend={opts.resolve_backend()}, "
+          f"(backend={opts.resolve_backend()}{seg_note}, "
           f"builder_cache={builder_cache_stats()})")
+
+    if n_ingest:
+        s0 = builder_cache_stats()
+        t0 = time.time()
+        for _ in range(n_ingest):
+            index.add_docs([rng.integers(0, 256, size=doc_len)])
+        s1 = builder_cache_stats()
+        built = (s1["hits"] + s1["misses"]) - (s0["hits"] + s0["misses"])
+        line = (f"ingested {n_ingest} docs in {time.time() - t0:.2f}s: "
+                f"{built} segment builds (incl. compaction merges), "
+                f"segments={index.n_segments}")
+        if store is not None:
+            traffic = store.save(entry, index)
+            line += (f", synced {traffic['segments_written']} segments "
+                     f"(-{traffic['segments_deleted']} dropped)")
+        print(line)
     if counters is not None and counters.supersteps:
         from ..bsp.psort import resolve_bsp_sort_impl
         impl = resolve_bsp_sort_impl(opts.sort_impl, opts.pack_keys)
@@ -222,6 +275,13 @@ def main():
                     choices=["none", "reject", "shed"],
                     help="behavior past queue_depth (default: "
                          "cfg.overload_policy)")
+    ap.add_argument("--segments", type=int, default=None,
+                    help="serve a SegmentedIndex with this many segments "
+                         "for --arch suffix-array (default: cfg.segments; "
+                         "0 = monolithic)")
+    ap.add_argument("--ingest", type=int, default=None,
+                    help="docs to stream through add_docs after the initial "
+                         "build (requires --segments; default: cfg.ingest)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -236,7 +296,9 @@ def main():
                                 arrival=args.arrival,
                                 coalesce_max_wait_us=args.coalesce_max_wait_us,
                                 queue_depth=args.queue_depth,
-                                overload_policy=args.overload_policy)
+                                overload_policy=args.overload_policy,
+                                segments=args.segments,
+                                ingest=args.ingest)
     if args.smoke:
         cfg = cfg.smoke()
     params, _ = lm_init(jax.random.PRNGKey(0), cfg)

@@ -10,11 +10,16 @@ Data path (one request's life):
         accept → PendingQuery into the inbox, coalesce thread woken
     coalesce loop                        [thread 1]
       inbox → Coalescer buckets; windows close on full-bucket or
-      max-wait deadline → QueryBatch.from_encoded + stage_batch
-      (host→device transfer STARTS here) → staging queue (depth 1)
+      max-wait deadline → index.stage_encoded (host→device transfer
+      STARTS here) → staging queue (depth 1)
     device loop                          [thread 2]
-      staging queue → _ranges_kernel on the staged buffers →
-      block on results → resolve futures, record metrics
+      staging queue → index.ranges_staged runs the kernel(s) on the
+      staged buffers → block on results → resolve futures, record
+      metrics
+
+The index is either a monolithic `SuffixArrayIndex` (one `QueryBatch`,
+one `_ranges_kernel` call) or a `SegmentedIndex` (one staged batch per
+segment, counts merged) — the loops only speak the staging protocol.
 
 The staging queue of depth 1 is the double buffer: while the device loop
 blocks on batch k's kernel, the coalesce thread encodes and stages batch
@@ -43,8 +48,7 @@ from typing import Optional
 
 import numpy as np
 
-from ..api.query import (QueryBatch, _MIN_LEN_BUCKET, batch_ranges,
-                         pow2_bucket, stage_batch)
+from ..api.query import _MIN_LEN_BUCKET, pow2_bucket
 from .admission import AdmissionController, POLICIES
 from .coalescer import Coalescer, PendingQuery
 from .metrics import ServeMetrics
@@ -57,7 +61,13 @@ _EMA_ALPHA = 0.2
 
 @dataclass(frozen=True)
 class Response:
-    """Terminal state of one submitted request."""
+    """Terminal state of one submitted request.
+
+    Over a monolithic `SuffixArrayIndex`, ``(lo, hi)`` is the SA-rank
+    range of the matches. Over a `repro.api.SegmentedIndex`, per-segment
+    ranks don't compose into global ranks, so ``(lo, hi)`` is the
+    *virtual* merged range ``[0, count)`` — ``count`` is exact either
+    way (docs/api.md, "Multi-segment semantics")."""
 
     req_id: int
     status: str                          # "ok" | "rejected" | "shed"
@@ -76,6 +86,13 @@ class Response:
 
 class SAServer:
     """Coalescing, admission-controlled serving loop over one index.
+
+    `index` is either a monolithic `repro.api.SuffixArrayIndex` or a
+    `repro.api.SegmentedIndex` — both speak the `_encode_pattern` /
+    `stage_encoded` / `ranges_staged` staging protocol the loops are
+    written against, so incremental multi-segment corpora serve through
+    the identical data path (per-segment kernels fan out inside
+    `ranges_staged`).
 
     Parameters mirror `repro.configs.SAConfig` serving knobs:
 
@@ -164,7 +181,7 @@ class SAServer:
                          for l in pattern_lens}):
             for b in batch_buckets:
                 pats = [np.zeros(m, np.int64)] * int(b)
-                batch_ranges(self.index, QueryBatch.encode(self.index, pats))
+                self.index.count_batch(pats)
                 done += 1
         self.warmed_shapes += done
         return done
@@ -257,12 +274,10 @@ class SAServer:
         loop. Runs OUTSIDE the lock: staging overlaps both new arrivals
         and the in-flight kernel. Blocks when the staging slot is full —
         that is the backpressure edge."""
-        batch = QueryBatch.from_encoded(self.index,
-                                        [r.pattern for r in reqs])
-        staged = (stage_batch(self.index, batch) if self.index.n else None)
+        work = self.index.stage_encoded([r.pattern for r in reqs])
         t_dispatch = time.perf_counter()
-        self.metrics.record_batch(len(reqs), batch.bucket[0])
-        self._stage_q.put((batch, staged, reqs, t_dispatch))
+        self.metrics.record_batch(len(reqs), pow2_bucket(len(reqs)))
+        self._stage_q.put((work, reqs, t_dispatch))
 
     # -------------------------------------------------------- device thread
     def _device_loop(self) -> None:
@@ -270,11 +285,11 @@ class SAServer:
             item = self._stage_q.get()
             if item is None:
                 return
-            batch, staged, reqs, t_dispatch = item
+            work, reqs, t_dispatch = item
             with self._cond:
                 self._queued -= len(reqs)
             try:
-                lo, hi = batch_ranges(self.index, batch, staged=staged)
+                lo, hi = self.index.ranges_staged(work)
             except Exception as e:                 # pragma: no cover
                 for r in reqs:
                     r.future.set_exception(e)

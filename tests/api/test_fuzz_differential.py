@@ -1,0 +1,186 @@
+"""Cross-backend differential fuzzing — every backend × sort_impl cell
+must produce byte-identical suffix arrays, LCPs, and query results on
+seeded random corpora.
+
+Two tiers share one body of generators and assertions:
+
+* **tier-1 smoke** (always on, part of the plain `pytest` run): a fixed
+  seed, one small corpus per family, and the cheap cells — enough to
+  catch a broken backend in seconds.
+* **full matrix** (`FUZZ_FULL=1`, the nightly CI job): every registered
+  backend × every sort_impl it accepts, larger corpora, several
+  repetitions. `FUZZ_SEED=<int>` overrides the seed; the harness prints
+  the active seed so a red nightly is reproducible locally with
+  `FUZZ_FULL=1 FUZZ_SEED=<logged> pytest -m fuzz`.
+
+Corpus families target the construction edge cases that uniform-random
+data never hits:
+
+* ``uniform``          — i.i.d. symbols, the baseline
+* ``all_equal``        — one repeated symbol: maximal LCPs, worst-case
+                         ties through every sort path
+* ``periodic``         — short repeating period: deep DC-v recursion,
+                         long runs of equal difference-cover keys
+* ``sentinel_adjacent``— values clustered at 0, the boundary against the
+                         shifted separator band in `encode_docs`
+* ``sigma_boundary``   — values clustered at sigma-1, the top of the
+                         declared alphabet (exercises the int32 clamp in
+                         `QueryBatch.from_encoded` at large sigma)
+
+Run explicitly with `pytest -m fuzz`.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import SAOptions, SuffixArrayIndex, build_suffix_array
+
+pytestmark = pytest.mark.fuzz
+
+FULL = os.environ.get("FUZZ_FULL", "") == "1"
+SEED = int(os.environ.get("FUZZ_SEED", "3405691582"))
+
+# ------------------------------------------------------------------ corpora
+
+def _uniform(rng, n, sigma):
+    return rng.integers(0, sigma, n)
+
+
+def _all_equal(rng, n, sigma):
+    return np.full(n, int(rng.integers(0, sigma)))
+
+
+def _periodic(rng, n, sigma):
+    period = rng.integers(0, sigma, int(rng.integers(2, 6)))
+    return np.tile(period, n // len(period) + 1)[:n]
+
+
+def _sentinel_adjacent(rng, n, sigma):
+    # mass at the bottom of the alphabet: encoded values sit right above
+    # the separator band (separators are < shift, data is value + shift)
+    return np.minimum(rng.geometric(0.6, n) - 1, sigma - 1)
+
+
+def _sigma_boundary(rng, n, sigma):
+    # mass at the top of the alphabet, including sigma-1 itself
+    return np.maximum(sigma - rng.geometric(0.6, n), 0)
+
+
+FAMILIES = {
+    "uniform": _uniform,
+    "all_equal": _all_equal,
+    "periodic": _periodic,
+    "sentinel_adjacent": _sentinel_adjacent,
+    "sigma_boundary": _sigma_boundary,
+}
+
+# ------------------------------------------------------------------- matrix
+# (backend, sort_impl) cells. seq/oracle ignore sort_impl (run once with
+# "auto"); jax accepts every impl; bsp rejects "pallas" by contract.
+_SMOKE_CELLS = [("seq", "auto"), ("jax", "auto"), ("bsp", "auto")]
+_FULL_CELLS = _SMOKE_CELLS + [
+    ("jax", "radix"), ("jax", "lax"), ("jax", "bitonic"), ("jax", "pallas"),
+    ("bsp", "radix"), ("bsp", "lax"), ("bsp", "bitonic"),
+]
+CELLS = _FULL_CELLS if FULL else _SMOKE_CELLS
+REPS = range(3) if FULL else range(1)
+
+
+def _size_for(cell):
+    # pallas row-sort kernels run interpret=True on CPU hosts — keep the
+    # cell meaningful but small so the matrix stays nightly-sized
+    if cell[1] == "pallas":
+        return 48
+    return 240 if FULL else 64
+
+
+def _rng(*key):
+    """Deterministic per-case stream: the logged SEED plus stable ints
+    derived from the case identity — no cross-case coupling, and any
+    single cell reproduces in isolation."""
+    parts = [SEED] + [abs(hash(k)) % (2 ** 31) for k in key]
+    return np.random.default_rng(parts)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _log_seed():
+    # surfaces in `pytest -s` output and in the nightly artifact, so a
+    # failing run is reproducible via FUZZ_SEED
+    print(f"\n[fuzz] FUZZ_SEED={SEED} FUZZ_FULL={int(FULL)} "
+          f"cells={len(CELLS)}")
+    yield
+
+
+# -------------------------------------------------------- SA / LCP equality
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("cell", CELLS, ids=lambda c: f"{c[0]}-{c[1]}")
+@pytest.mark.parametrize("rep", REPS)
+def test_suffix_array_matches_oracle(family, cell, rep):
+    backend, sort_impl = cell
+    n = _size_for(cell)
+    rng = _rng("sa", family, cell, rep)
+    sigma = int(rng.integers(2, 64))
+    text = np.asarray(FAMILIES[family](rng, n, sigma), np.int64)
+
+    want = build_suffix_array(text, backend="oracle")
+    got = build_suffix_array(
+        text, SAOptions(backend=backend, sort_impl=sort_impl))
+    np.testing.assert_array_equal(
+        got, want,
+        err_msg=f"SA mismatch: {family} seed={SEED} cell={cell} rep={rep}")
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("cell", CELLS, ids=lambda c: f"{c[0]}-{c[1]}")
+def test_lcp_matches_oracle(family, cell):
+    backend, sort_impl = cell
+    n = _size_for(cell)
+    rng = _rng("lcp", family, cell)
+    sigma = int(rng.integers(2, 16))
+    docs = [FAMILIES[family](rng, int(rng.integers(8, n // 2 + 9)), sigma)
+            for _ in range(3)]
+
+    ref = SuffixArrayIndex.from_docs(docs, SAOptions(backend="oracle"))
+    idx = SuffixArrayIndex.from_docs(
+        docs, SAOptions(backend=backend, sort_impl=sort_impl))
+    np.testing.assert_array_equal(idx.sa, ref.sa)
+    np.testing.assert_array_equal(
+        idx.lcp, ref.lcp,
+        err_msg=f"LCP mismatch: {family} seed={SEED} cell={cell}")
+
+
+# ----------------------------------------------------------- query equality
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("cell", CELLS, ids=lambda c: f"{c[0]}-{c[1]}")
+@pytest.mark.parametrize("rep", REPS)
+def test_queries_match_oracle(family, cell, rep):
+    backend, sort_impl = cell
+    n = _size_for(cell)
+    rng = _rng("query", family, cell, rep)
+    sigma = int(rng.integers(2, 32))
+    docs = [FAMILIES[family](rng, int(rng.integers(6, n // 3 + 7)), sigma)
+            for _ in range(4)]
+
+    ref = SuffixArrayIndex.from_docs(docs, SAOptions(backend="oracle"),
+                                     sigma=sigma)
+    idx = SuffixArrayIndex.from_docs(
+        docs, SAOptions(backend=backend, sort_impl=sort_impl), sigma=sigma)
+
+    pats = []
+    for d in docs:                      # planted substrings — must hit
+        at = int(rng.integers(0, max(len(d) - 3, 1)))
+        pats.append(np.asarray(d[at:at + 3], np.int64))
+    pats += [rng.integers(0, sigma, int(l)) for l in (1, 2, 5, 9)]
+    pats.append(np.asarray(docs[0], np.int64))          # whole doc
+    pats.append(np.zeros(0, np.int64))                  # empty → count n
+
+    msg = f"{family} seed={SEED} cell={cell} rep={rep}"
+    np.testing.assert_array_equal(
+        idx.count_batch(pats), ref.count_batch(pats), err_msg=msg)
+    np.testing.assert_array_equal(
+        idx.contains_batch(pats), ref.contains_batch(pats), err_msg=msg)
+    locatable = [p for p in pats if len(p)]
+    for got, want in zip(idx.locate_batch(locatable),
+                         ref.locate_batch(locatable)):
+        np.testing.assert_array_equal(got, want, err_msg=msg)

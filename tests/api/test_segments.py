@@ -1,0 +1,471 @@
+"""Segmented serving: merged-vs-monolithic equivalence, incremental
+ingest/delete builder traffic, size-tiered compaction, the
+`SegmentedIndexStore` persistence contract (incremental sync, tamper and
+rollback detection), and the serving tier over a segmented corpus.
+
+The load-bearing property everywhere: a `SegmentedIndex` over ANY
+segment layout answers every query byte-identically to one monolithic
+`SuffixArrayIndex.from_docs` over the same documents — segmentation is
+an amortization strategy, never a semantics change.
+"""
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.api import (SAOptions, Segment, SegmentedIndex,
+                       SegmentedIndexStore, StaleIndexError,
+                       SuffixArrayIndex, builder_cache_stats)
+
+SEQ = SAOptions(backend="seq")
+#: fanin high enough that compaction never fires — isolates ingest traffic
+NO_COMPACT = SAOptions(backend="seq", compact_fanin=64)
+
+
+def _builds():
+    s = builder_cache_stats()
+    return s["hits"] + s["misses"]
+
+
+def _docs(seed=0, n_docs=7, sigma=5, lo=20, hi=60):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, sigma, int(rng.integers(lo, hi))).tolist()
+            for _ in range(n_docs)]
+
+
+def _patterns(docs):
+    """Planted, random, separator-spanning, and degenerate patterns."""
+    rng = np.random.default_rng(99)
+    pats = [d[:3] for d in docs if len(d) >= 3]
+    pats += [list(rng.integers(0, 5, l)) for l in (1, 2, 4, 7)]
+    # spans a document boundary in the monolithic encoding — must match
+    # in NEITHER index (separators are unique symbols)
+    a, b = docs[0], docs[1]
+    if len(a) >= 2 and len(b) >= 2:
+        pats.append(list(a[-2:]) + list(b[:2]))
+    pats.append(list(docs[-1]))          # a whole document
+    return pats
+
+
+def _assert_equivalent(seg, mono, pats):
+    np.testing.assert_array_equal(seg.count_batch(pats),
+                                  mono.count_batch(pats))
+    np.testing.assert_array_equal(seg.contains_batch(pats),
+                                  mono.contains_batch(pats))
+    for got, want in zip(seg.locate_batch(pats),
+                         mono.locate_docs_batch(pats)):
+        np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------------- merged == monolithic
+@pytest.mark.parametrize("segment_docs", [1, 2, 3, 7])
+def test_segmented_equals_monolithic(segment_docs):
+    docs = _docs()
+    seg = SegmentedIndex.from_docs(docs, SEQ, segment_docs=segment_docs)
+    mono = SuffixArrayIndex.from_docs(docs, SEQ)
+    assert seg.n == mono.n and seg.n_docs == mono.n_docs
+    _assert_equivalent(seg, mono, _patterns(docs))
+    # empty pattern counts the full encoded length, exactly as monolithic
+    assert int(seg.count_batch([[]])[0]) == mono.n
+
+
+def test_empty_docs_and_single_doc_segments():
+    docs = [[1, 2, 3, 1, 2], [], [2, 2, 2], [], [0]]
+    seg = SegmentedIndex.from_docs(docs, SEQ, segment_docs=1)
+    mono = SuffixArrayIndex.from_docs(docs, SEQ)
+    _assert_equivalent(seg, mono, [[1, 2], [2, 2], [0], [3, 1]])
+    assert seg.n_docs == 5 and seg.n_segments == 5
+
+
+def test_empty_corpus():
+    seg = SegmentedIndex.from_docs([], SEQ)
+    assert seg.n == 0 and seg.n_docs == 0
+    assert seg.count([1, 2]) == 0
+    assert not seg.contains([1])
+    assert seg.locate([5]).shape == (0, 2)
+
+
+def test_scalar_shims_and_doc_accessor():
+    docs = _docs(n_docs=4)
+    seg = SegmentedIndex.from_docs(docs, SEQ, segment_docs=2)
+    mono = SuffixArrayIndex.from_docs(docs, SEQ)
+    p = docs[2][:4]
+    assert seg.count(p) == mono.count(p)
+    assert seg.contains(p) == bool(mono.contains_batch([p])[0])
+    np.testing.assert_array_equal(seg.doc(2), np.asarray(docs[2]))
+    with pytest.raises(KeyError):
+        seg.doc(99)
+
+
+def test_locate_rejects_empty_pattern():
+    seg = SegmentedIndex.from_docs(_docs(n_docs=2), SEQ, segment_docs=1)
+    with pytest.raises(ValueError, match="empty pattern"):
+        seg.locate_batch([[]])
+
+
+def test_pattern_validation_matches_monolithic():
+    docs = _docs(n_docs=3)
+    seg = SegmentedIndex.from_docs(docs, SEQ, segment_docs=1, sigma=5)
+    with pytest.raises(ValueError, match="≥ 0"):
+        seg.count([-1])
+    with pytest.raises(ValueError, match="outside the corpus alphabet"):
+        seg.count([7])
+
+
+def test_locate_rows_are_global_and_sorted():
+    docs = [[1, 2, 1, 2], [2, 1, 2], [1, 2]]
+    seg = SegmentedIndex.from_docs(docs, SEQ, segment_docs=1)
+    rows = seg.locate([1, 2])
+    # (doc, offset) rows, lexicographically sorted, global doc ids
+    assert rows.tolist() == [[0, 0], [0, 2], [1, 1], [2, 0]]
+
+
+# --------------------------------------------------- ingest/delete traffic
+def test_single_doc_ingest_builds_exactly_one_segment():
+    seg = SegmentedIndex.from_docs(_docs(), NO_COMPACT, segment_docs=2)
+    before = _builds()
+    ids = seg.add_docs([[4, 0, 4, 0, 4]])
+    assert _builds() - before == 1, "ingest must build ONE segment"
+    assert ids == [7] and seg.n_docs == 8
+    assert seg.count([4, 0, 4]) >= 1
+
+
+def test_ingest_matches_full_rebuild():
+    docs = _docs(n_docs=5)
+    seg = SegmentedIndex.from_docs(docs, NO_COMPACT, segment_docs=2)
+    extra = [[0, 1, 0, 1, 0, 1], [3, 3, 3]]
+    seg.add_docs(extra)
+    mono = SuffixArrayIndex.from_docs(docs + extra, SEQ)
+    _assert_equivalent(seg, mono, _patterns(docs + extra))
+
+
+def test_delete_rebuilds_only_owning_segment():
+    seg = SegmentedIndex.from_docs(_docs(), NO_COMPACT, segment_docs=2)
+    before = _builds()
+    seg.delete_doc(2)                    # shares a segment with doc 3
+    assert _builds() - before == 1, "delete must rebuild ONE segment"
+    docs_left = [d for i, d in enumerate(_docs()) if i != 2]
+    mono = SuffixArrayIndex.from_docs(docs_left, SEQ)
+    # doc ids keep their global numbering after the delete
+    np.testing.assert_array_equal(
+        seg.doc_ids, [i for i in range(7) if i != 2])
+    np.testing.assert_array_equal(seg.count_batch(_patterns(docs_left)),
+                                  mono.count_batch(_patterns(docs_left)))
+    with pytest.raises(KeyError):
+        seg.doc(2)
+
+
+def test_delete_sole_doc_drops_segment_with_zero_builds():
+    seg = SegmentedIndex.from_docs(_docs(n_docs=3), NO_COMPACT,
+                                   segment_docs=1)
+    before = _builds()
+    seg.delete_doc(1)
+    assert _builds() - before == 0
+    assert seg.n_segments == 2 and seg.n_docs == 2
+
+
+def test_doc_ids_never_reused_after_delete():
+    seg = SegmentedIndex.from_docs(_docs(n_docs=4), NO_COMPACT,
+                                   segment_docs=2)
+    seg.delete_doc(3)
+    assert seg.add_docs([[1, 1]]) == [4], "freed ids must not be recycled"
+
+
+# ------------------------------------------------------------- compaction
+def test_compaction_bounds_fanout_and_preserves_results():
+    docs = _docs(n_docs=9, lo=30, hi=40)      # 9 same-tier segments
+    opts = SAOptions(backend="seq", compact_fanin=3)
+    seg = SegmentedIndex.from_docs(docs, opts, segment_docs=1)
+    assert seg.n_segments == 9
+    merges = seg.compact()
+    assert merges >= 1 and seg.n_segments < 9
+    mono = SuffixArrayIndex.from_docs(docs, SEQ)
+    _assert_equivalent(seg, mono, _patterns(docs))
+
+
+def test_ingest_stream_amortized_builds():
+    """Streaming ingests with compaction on: per-ingest builds are 1 +
+    occasional merges, and the segment count stays logarithmic instead
+    of linear in the number of ingests."""
+    rng = np.random.default_rng(5)
+    opts = SAOptions(backend="seq", compact_fanin=4)
+    seg = SegmentedIndex.from_docs([], opts)
+    n_ingests = 12
+    before = _builds()
+    for _ in range(n_ingests):
+        seg.add_docs([rng.integers(0, 4, 25).tolist()])
+    built = _builds() - before
+    assert built >= n_ingests                       # one per ingest...
+    assert built < 2 * n_ingests                    # ...plus few merges
+    assert seg.n_segments <= 8, "compaction must bound fan-out"
+    assert seg.n_docs == n_ingests
+
+
+def test_from_docs_layout_is_exact():
+    # from_docs never compacts: tests may pin per-segment structure
+    seg = SegmentedIndex.from_docs(_docs(n_docs=6, lo=30, hi=31),
+                                   SAOptions(backend="seq",
+                                             compact_fanin=2),
+                                   segment_docs=1)
+    assert seg.n_segments == 6
+    assert [len(s.doc_ids) for s in seg.segments] == [1] * 6
+
+
+# ------------------------------------------------- serving-tier protocol
+def test_staging_protocol_merges_counts():
+    docs = _docs(n_docs=6)
+    seg = SegmentedIndex.from_docs(docs, SEQ, segment_docs=2)
+    mono = SuffixArrayIndex.from_docs(docs, SEQ)
+    pats = _patterns(docs)
+    enc = [seg._encode_pattern(p) for p in pats]
+    lo, hi = seg.ranges_staged(seg.stage_encoded(enc))
+    assert (lo == 0).all(), "segmented ranges are virtual [0, count)"
+    np.testing.assert_array_equal(hi - lo, mono.count_batch(pats))
+
+
+def test_query_session_over_segmented_index():
+    from repro.api import QuerySession
+    docs = _docs(n_docs=6)
+    seg = SegmentedIndex.from_docs(docs, SEQ, segment_docs=2)
+    mono = SuffixArrayIndex.from_docs(docs, SEQ)
+    sess = QuerySession(seg, batch_size=4)
+    pats = _patterns(docs)
+    np.testing.assert_array_equal(sess.count(pats), mono.count_batch(pats))
+    for got, want in zip(sess.locate(pats), mono.locate_docs_batch(pats)):
+        np.testing.assert_array_equal(got, want)
+    assert sess.queries_served == 2 * len(pats)
+
+
+def test_sa_server_over_segmented_index():
+    from repro.serve import SAServer
+    docs = _docs(n_docs=6)
+    seg = SegmentedIndex.from_docs(docs, SEQ, segment_docs=2)
+    mono = SuffixArrayIndex.from_docs(docs, SEQ)
+    pats = _patterns(docs)
+    with SAServer(seg, max_batch=8, coalesce_max_wait_us=200.0) as srv:
+        srv.warmup(pattern_lens=(4,), batch_buckets=[1, 4])
+        futs = [srv.submit(p) for p in pats]
+        got = [f.result(timeout=30) for f in futs]
+    want = mono.count_batch(pats)
+    assert all(r.ok for r in got)
+    assert [r.count for r in got] == list(want)
+    assert all(r.lo == 0 and r.hi == r.count for r in got)
+
+
+# ------------------------------------------------------------ persistence
+@pytest.fixture
+def store(tmp_path):
+    return SegmentedIndexStore(str(tmp_path / "segstore"))
+
+
+def test_store_round_trip(store):
+    docs = _docs(n_docs=5)
+    seg = SegmentedIndex.from_docs(docs, NO_COMPACT, segment_docs=2,
+                                   sigma=5)
+    traffic = store.save("corpus", seg)
+    assert traffic == {"segments_written": 3, "segments_deleted": 0}
+    before = _builds()
+    loaded = store.load("corpus", options=NO_COMPACT)
+    assert _builds() - before == 0, "load must not build"
+    _assert_equivalent(loaded, SuffixArrayIndex.from_docs(docs, SEQ),
+                       _patterns(docs))
+    assert loaded.n_docs == seg.n_docs
+    assert loaded._next_doc_id == seg._next_doc_id
+    assert loaded._next_seg == seg._next_seg
+    assert loaded.sigma == 5
+
+
+def test_incremental_sync_writes_one_segment(store):
+    seg = SegmentedIndex.from_docs(_docs(), NO_COMPACT, segment_docs=2)
+    store.save("corpus", seg)
+    seg.add_docs([[1, 2, 3]])
+    traffic = store.save("corpus", seg)
+    assert traffic == {"segments_written": 1, "segments_deleted": 0}
+    loaded = store.load("corpus", options=NO_COMPACT)
+    assert loaded.n_docs == 8 and loaded.count([1, 2, 3]) >= 1
+
+
+def test_sync_garbage_collects_dropped_segments(store, tmp_path):
+    docs = _docs(n_docs=6, lo=30, hi=40)
+    opts = SAOptions(backend="seq", compact_fanin=3)
+    seg = SegmentedIndex.from_docs(docs, opts, segment_docs=1)
+    store.save("corpus", seg)
+    seg.compact()                                 # merges same-tier segments
+    traffic = store.save("corpus", seg)
+    assert traffic["segments_deleted"] >= 2
+    seg_root = os.path.join(store.path("corpus"), "segments")
+    on_disk = set(os.listdir(seg_root))
+    assert on_disk == {s.seg_id for s in seg.segments}
+
+
+def test_unsynced_load_only_sees_last_sync(store):
+    seg = SegmentedIndex.from_docs(_docs(n_docs=4), NO_COMPACT,
+                                   segment_docs=2)
+    store.save("corpus", seg)
+    seg.add_docs([[3, 3, 3, 3]])                  # NOT synced
+    loaded = store.load("corpus", options=NO_COMPACT)
+    assert loaded.n_docs == 4, "pre-sync state must load"
+
+
+def test_tampered_manifest_raises_stale(store):
+    seg = SegmentedIndex.from_docs(_docs(n_docs=4), NO_COMPACT,
+                                   segment_docs=2)
+    store.save("corpus", seg)
+    mpath = os.path.join(store.path("corpus"), "corpus.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["segments"][0]["n"] += 1             # tamper a recorded length
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(StaleIndexError, match="manifest records"):
+        store.load("corpus", options=NO_COMPACT)
+
+
+def test_corrupt_manifest_raises_stale(store):
+    seg = SegmentedIndex.from_docs(_docs(n_docs=2), NO_COMPACT)
+    store.save("corpus", seg)
+    with open(os.path.join(store.path("corpus"), "corpus.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(StaleIndexError, match="unreadable"):
+        store.load("corpus")
+
+
+def test_rolled_back_segment_raises_stale(store):
+    seg = SegmentedIndex.from_docs(_docs(n_docs=4), NO_COMPACT,
+                                   segment_docs=2)
+    store.save("corpus", seg)
+    # force a versioned re-save of one segment (step 0 → 1) …
+    victim = seg.segments[0]
+    seg.dirty.add(victim.seg_id)
+    store.save("corpus", seg)
+    assert victim.version == 1
+    # … then roll its checkpoint back to step 0 behind the manifest's back
+    spath = os.path.join(store.path("corpus"), "segments", victim.seg_id)
+    shutil.rmtree(os.path.join(spath, "step_00000001"))
+    with pytest.raises(StaleIndexError, match="rolled back"):
+        store.load("corpus", options=NO_COMPACT)
+
+
+def test_missing_segment_raises_stale(store):
+    seg = SegmentedIndex.from_docs(_docs(n_docs=4), NO_COMPACT,
+                                   segment_docs=2)
+    store.save("corpus", seg)
+    shutil.rmtree(os.path.join(store.path("corpus"), "segments",
+                               seg.segments[0].seg_id))
+    with pytest.raises(StaleIndexError, match="missing segment"):
+        store.load("corpus", options=NO_COMPACT)
+
+
+def test_options_fingerprint_mismatch_raises_stale(store):
+    seg = SegmentedIndex.from_docs(_docs(n_docs=2), NO_COMPACT)
+    store.save("corpus", seg)
+    with pytest.raises(StaleIndexError, match="plan"):
+        store.load("corpus", options=SAOptions(backend="seq", v0=7))
+
+
+def test_segmentation_knobs_do_not_invalidate(store):
+    """segment_docs / compact_fanin are serving-layer knobs, excluded from
+    the plan fingerprint — changing them must NOT go stale."""
+    seg = SegmentedIndex.from_docs(_docs(n_docs=4), NO_COMPACT,
+                                   segment_docs=2)
+    store.save("corpus", seg)
+    relayout = SAOptions(backend="seq", compact_fanin=2, segment_docs=1)
+    loaded = store.load("corpus", options=relayout)
+    assert loaded.compact_fanin == 2
+
+
+def test_get_or_build_statuses_and_stats(store):
+    docs = _docs(n_docs=4)
+    build = lambda: SegmentedIndex.from_docs(docs, NO_COMPACT,
+                                             segment_docs=2)
+    _, status = store.get_or_build("corpus", build, options=NO_COMPACT)
+    assert status == "miss"
+    _, status = store.get_or_build("corpus", build, options=NO_COMPACT)
+    assert status == "hit"
+    _, status = store.get_or_build("corpus", build,
+                                   options=SAOptions(backend="seq", v0=7))
+    assert status == "stale"
+    s = store.stats()
+    assert (s["hits"], s["misses"], s["stale"]) == (1, 1, 1)
+
+
+def test_invalid_entry_and_segment_ids(store):
+    with pytest.raises(ValueError):
+        store.path("../escape")
+    with pytest.raises(StaleIndexError):
+        store._segment_path("corpus", "nope/../../etc")
+
+
+# ------------------------------------------------- subprocess warm restart
+_PHASE = r"""
+import json, sys
+import numpy as np
+from repro.api import (SAOptions, SegmentedIndex, SegmentedIndexStore,
+                       builder_cache_stats)
+
+root, phase = sys.argv[1], sys.argv[2]
+opts = SAOptions(backend="seq", compact_fanin=64)
+docs = [[1, 2, 3, 1, 2], [2, 2, 2, 0], [0, 1, 0, 1, 0]]
+store = SegmentedIndexStore(root)
+
+def builds():
+    s = builder_cache_stats()
+    return s["hits"] + s["misses"]
+
+if phase == "build":
+    sidx = SegmentedIndex.from_docs(docs, opts, segment_docs=1)
+    traffic = store.save("corpus", sidx)
+    out = {"builds": builds(), **traffic}
+elif phase == "ingest":
+    b0 = builds()
+    sidx, status = store.get_or_build(
+        "corpus", lambda: (_ for _ in ()).throw(AssertionError("rebuilt!")),
+        options=opts)
+    load_builds = builds() - b0
+    sidx.add_docs([[3, 3, 3, 3]])
+    ingest_builds = builds() - b0 - load_builds
+    traffic = store.save("corpus", sidx)
+    out = {"status": status, "load_builds": load_builds,
+           "ingest_builds": ingest_builds, **traffic}
+elif phase == "verify":
+    b0 = builds()
+    sidx = store.load("corpus", options=opts)
+    out = {"load_builds": builds() - b0, "n_docs": sidx.n_docs,
+           "count": int(sidx.count([3, 3, 3, 3]))}
+print(json.dumps(out))
+"""
+
+
+def _run_phase(root, phase):
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(os.path.dirname(__file__),
+                                       "..", "..", "src"))
+    proc = subprocess.run(
+        [sys.executable, "-c", _PHASE, str(root), phase],
+        capture_output=True, text=True, timeout=300, env=env)
+    assert proc.returncode == 0, proc.stderr
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_warm_restart_across_processes(tmp_path):
+    """Three real processes against one store directory: build+save, then
+    a warm restart that loads with ZERO builder traffic and pays exactly
+    one segment build + one segment write for an ingest, then a second
+    restart that sees the ingested document."""
+    root = str(tmp_path / "segstore")
+    p1 = _run_phase(root, "build")
+    assert p1["builds"] == 3 and p1["segments_written"] == 3
+
+    p2 = _run_phase(root, "ingest")
+    assert p2["status"] == "hit"
+    assert p2["load_builds"] == 0, "warm restart must not rebuild"
+    assert p2["ingest_builds"] == 1, "ingest is one segment build"
+    assert p2["segments_written"] == 1, "sync writes only the new segment"
+
+    p3 = _run_phase(root, "verify")
+    assert p3["load_builds"] == 0
+    assert p3["n_docs"] == 4 and p3["count"] == 1

@@ -165,6 +165,128 @@ def test_get_or_build_traffic(tmp_path):
         store.load("nope")
 
 
+def test_get_or_build_stats_are_atomic(tmp_path):
+    """Stats must update atomically with the returned (index, status) —
+    a build_fn that raises on the miss or stale-then-rebuild path leaves
+    `stats()` untouched instead of recording a rebuild that never
+    completed."""
+    docs = _docs(seed=21)
+    opts = SAOptions(backend="jax")
+    store = IndexStore(str(tmp_path / "store"))
+
+    def boom():
+        raise RuntimeError("builder exploded")
+
+    # failing build on the MISS path: no phantom miss recorded
+    with pytest.raises(RuntimeError, match="exploded"):
+        store.get_or_build("c", boom, options=opts)
+    assert store.stats() == {"entries": 0, "hits": 0, "misses": 0,
+                             "stale": 0}
+
+    build = lambda: SuffixArrayIndex.from_docs(docs, opts)
+    _, s = store.get_or_build("c", build, options=opts)
+    assert s == "miss"
+    # failing build on the STALE-then-rebuild path: entry exists but the
+    # plan mismatches; the rebuild raises → no phantom stale recorded
+    with pytest.raises(RuntimeError, match="exploded"):
+        store.get_or_build("c", boom,
+                           options=SAOptions(backend="jax", v0=7))
+    assert store.stats() == {"entries": 1, "hits": 0, "misses": 1,
+                             "stale": 0}
+    # and the surviving entry still hits
+    _, s = store.get_or_build("c", build, options=opts)
+    assert s == "hit"
+
+
+def test_get_or_build_stats_under_concurrency(tmp_path):
+    """Concurrent warm readers must not lose stat increments."""
+    import threading
+    docs = _docs(seed=22)
+    opts = SAOptions(backend="jax")
+    store = IndexStore(str(tmp_path / "store"))
+    idx = SuffixArrayIndex.from_docs(docs, opts)
+    store.save("c", idx)
+    statuses, errs = [], []
+
+    def worker():
+        try:
+            _, s = store.get_or_build("c", lambda: idx, options=opts)
+            statuses.append(s)
+        except Exception as e:                      # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs and statuses == ["hit"] * 16
+    assert store.stats()["hits"] == 16
+
+
+# --------------------------------------- backend × sort_impl round-trips
+#: every meaningful persistence cell: oracle/seq ignore sort_impl (one
+#: cell each), jax takes every impl, bsp everything but pallas.
+_RT_CELLS = ([("oracle", "auto"), ("seq", "auto")]
+             + [("jax", s) for s in ("auto", "radix", "lax", "bitonic",
+                                     "pallas")]
+             + [("bsp", s) for s in ("auto", "radix", "lax", "bitonic")])
+
+
+@pytest.mark.parametrize("backend,sort_impl", _RT_CELLS,
+                         ids=[f"{b}-{s}" for b, s in _RT_CELLS])
+def test_roundtrip_matrix(backend, sort_impl, tmp_path):
+    """Save → load → query for every backend × sort_impl cell; the
+    restored index must re-check against the SAME plan fingerprint and
+    answer queries identically."""
+    # pallas row-sort kernels run interpret=True on CPU: keep n tiny
+    docs = (_docs(seed=7, n_docs=2, max_len=12) if sort_impl == "pallas"
+            else _docs(seed=7))
+    opts = SAOptions(backend=backend, sort_impl=sort_impl,
+                     base_threshold=64)
+    idx = SuffixArrayIndex.from_docs(docs, opts)
+    path = str(tmp_path / "idx")
+    save_index(path, idx)
+    got = load_index(path, options=opts)
+    assert np.array_equal(got.sa, idx.sa)
+    assert np.array_equal(got.text, idx.text)
+    pats = [docs[0][:3].tolist(), [4, 4, 4], [0]]
+    assert got.count_batch(pats).tolist() == idx.count_batch(pats).tolist()
+    # a different sort_impl is a different plan → stale, never silent
+    other = "lax" if sort_impl != "lax" else "radix"
+    with pytest.raises(StaleIndexError, match="plan"):
+        load_index(path, options=opts.replace(sort_impl=other))
+
+
+def test_bsp_rejects_pallas_sort_impl():
+    docs = _docs(seed=7, n_docs=2, max_len=12)
+    with pytest.raises(ValueError, match="pallas"):
+        SuffixArrayIndex.from_docs(
+            docs, SAOptions(backend="bsp", sort_impl="pallas"))
+
+
+def test_tampered_segment_manifest_surfaces_through_store(tmp_path):
+    """Segmented persistence: hand-editing one SEGMENT's own checkpoint
+    manifest (not the corpus manifest) must surface as StaleIndexError
+    through SegmentedIndexStore.load — the per-segment corpus sha check
+    catches it."""
+    from repro.api import SegmentedIndex, SegmentedIndexStore
+    store = SegmentedIndexStore(str(tmp_path / "segstore"))
+    sidx = SegmentedIndex.from_docs(_docs(seed=8), SAOptions(backend="seq"),
+                                    segment_docs=2)
+    store.save("corpus", sidx)
+    seg_id = sidx.segments[0].seg_id
+    mpath = os.path.join(store.path("corpus"), "segments", seg_id,
+                         "step_00000000", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["extras"]["corpus_sha256"] = "f" * 64
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(StaleIndexError, match="corpus"):
+        store.load("corpus")
+
+
 def test_fingerprint_covers_plan_not_runtime():
     base = SAOptions(backend="jax", v0=3)
     assert base.fingerprint() == SAOptions(backend="jax").fingerprint()
