@@ -1,0 +1,157 @@
+"""Training data plane: streaming dedup + contamination-gate throughput.
+
+Three tables over the same synthetic shard stream:
+
+* **dedup** — chars/s through `StreamingDedup` as shard size varies,
+  against the monolithic `dedup_docs` rebuild of the full corpus each
+  streaming run is compared to. Every streaming record carries the
+  builder-cache delta (must equal the shard count — the
+  one-build-per-shard contract) and the run asserts byte-identical
+  output to the monolithic pass before emitting anything.
+* **gate** — windows/s through `ContaminationGate.check` as the batch
+  grows (all grams of a batch resolve in one chunked `count_batch`).
+* **probe** — `longest_match` scoring latency per sample.
+
+    PYTHONPATH=src python -m benchmarks.data_plane_bench [--smoke] [--out P]
+"""
+import argparse
+import json
+import platform
+import sys
+
+import numpy as np
+
+from repro.api import builder_cache_stats
+from repro.data.pipeline import (ContaminationGate, PipelineConfig,
+                                 TrainingDataPlane, synthetic_corpus,
+                                 synthetic_doc_shards)
+from repro.text.dedup import dedup_docs
+
+from .bench_util import emit, time_call
+
+N_CHARS = 400_000
+DOC_LEN = 4_000
+SHARD_DOCS = (2, 8, 32)
+MIN_LEN = 48
+GATE_BATCHES = (8, 64)
+SEQ_LEN = 256
+PROBE_SAMPLES = 8
+
+
+def _builds() -> int:
+    s = builder_cache_stats()
+    return s["hits"] + s["misses"]
+
+
+def bench_dedup(records, n_chars: int, doc_len: int, shard_docs):
+    mono_docs, mono_rep, mono_us = None, None, None
+    for sd in shard_docs:
+        shards = synthetic_doc_shards(n_chars, 256, shard_docs=sd,
+                                      doc_len=doc_len, dup_fraction=0.3,
+                                      seed=11)
+        if mono_docs is None:
+            docs = [d for s in shards for d in s]
+            t0 = _builds()
+            mono_us = time_call(
+                lambda: dedup_docs(docs, min_len=MIN_LEN, sigma=256),
+                warmup=0, iters=1)
+            mono_docs, mono_rep = dedup_docs(docs, min_len=MIN_LEN,
+                                             sigma=256)
+            emit("dedup_monolithic", mono_us,
+                 f"chars_per_s={1e6 * n_chars / mono_us:.0f};"
+                 f"builds={_builds() - t0}")
+            records.append({"bench": "dedup", "mode": "monolithic",
+                            "us": mono_us, "n_chars": n_chars})
+        cfg = PipelineConfig(seq_len=SEQ_LEN, dedup=True,
+                             dedup_min_len=MIN_LEN, vocab=256)
+        plane = TrainingDataPlane(cfg)
+        b0, t0 = _builds(), None
+        us = time_call(lambda: [plane.ingest_shard(s) for s in shards],
+                       warmup=0, iters=1)
+        builds = _builds() - b0
+        # contracts, measured in-run: one build per shard, byte-identical
+        assert builds == len(shards), (builds, len(shards))
+        assert len(plane._kept) == len(mono_docs)
+        assert all(np.array_equal(a, b)
+                   for a, b in zip(plane._kept, mono_docs))
+        assert plane.report.dropped_chars == mono_rep.dropped_chars > 0
+        emit(f"dedup_stream_shard{sd}", us,
+             f"chars_per_s={1e6 * n_chars / us:.0f};builds={builds};"
+             f"vs_mono={us / mono_us:.2f}x")
+        records.append({"bench": "dedup", "mode": "stream",
+                        "shard_docs": sd, "us": us, "builds": builds,
+                        "n_chars": n_chars,
+                        "dropped": plane.report.dropped_chars})
+
+
+def bench_gate(records, n_chars: int, batches):
+    eval_docs = [synthetic_corpus(8192, 256, seed=900 + j)
+                 for j in range(4)]
+    gate = ContaminationGate(eval_docs, min_len=MIN_LEN, sigma=256)
+    corpus = synthetic_corpus(n_chars, 256, seed=12)
+    # half the windows carry a planted eval stretch → real hit traffic
+    flat = np.concatenate(eval_docs)
+    for B in batches:
+        rng = np.random.default_rng(B)
+        starts = rng.integers(0, n_chars - SEQ_LEN - 1, size=B)
+        wins = np.stack([corpus[s:s + SEQ_LEN + 1] for s in starts])
+        src = rng.integers(0, len(flat) - 2 * MIN_LEN, size=B // 2)
+        for i, s in enumerate(src):
+            wins[2 * i, 10:10 + 2 * MIN_LEN] = flat[s:s + 2 * MIN_LEN]
+        hits, _ = gate.check(wins)
+        assert (hits[0::2][:B // 2] > 0).all() and (hits[1::2] == 0).all()
+        us = time_call(gate.check, wins, warmup=1, iters=3)
+        emit(f"gate_check_b{B}", us,
+             f"windows_per_s={1e6 * B / us:.0f}")
+        records.append({"bench": "gate", "batch": B, "us": us})
+
+
+def bench_probe(records, n_chars: int):
+    shards = synthetic_doc_shards(n_chars // 4, 256, shard_docs=8,
+                                  doc_len=DOC_LEN, seed=13)
+    plane = TrainingDataPlane(
+        PipelineConfig(dedup=True, dedup_min_len=MIN_LEN, vocab=256),
+        shards=shards)
+    rng = np.random.default_rng(14)
+    docs = [d for s in shards for d in s]
+    samples = []
+    for k in range(PROBE_SAMPLES):
+        if k % 2 == 0:     # verbatim training excerpt (raw doc slice)
+            d = docs[int(rng.integers(0, len(docs)))]
+            at = int(rng.integers(0, len(d) - 256))
+            samples.append(d[at:at + 256])
+        else:              # fresh sequence
+            samples.append(rng.integers(0, 256, size=256))
+    us = time_call(plane.probe, samples, warmup=1, iters=3)
+    m = plane.probe(samples)
+    assert m["longest_copy_max"] >= 256
+    emit("probe_longest_match", us,
+         f"samples_per_s={1e6 * PROBE_SAMPLES / us:.0f};"
+         f"copy_max={m['longest_copy_max']}")
+    records.append({"bench": "probe", "samples": PROBE_SAMPLES, "us": us,
+                    "longest_copy_max": m["longest_copy_max"]})
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--out", default="results/data_plane_bench.json")
+    args = ap.parse_args(argv)
+    n_chars = 60_000 if args.smoke else N_CHARS
+    doc_len = 1_500 if args.smoke else DOC_LEN
+    shard_docs = SHARD_DOCS[:2] if args.smoke else SHARD_DOCS
+    batches = GATE_BATCHES[:1] if args.smoke else GATE_BATCHES
+    records: list = []
+    bench_dedup(records, n_chars, doc_len, shard_docs)
+    bench_gate(records, n_chars, batches)
+    bench_probe(records, n_chars)
+    if args.out:
+        payload = {"host": platform.node(), "argv": sys.argv[1:],
+                   "records": records}
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

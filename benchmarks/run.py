@@ -16,18 +16,20 @@ def main(argv=None) -> None:
                     help="include the roofline table (reads dry-run records "
                          "under results/; skipped by default)")
     args = ap.parse_args(argv)
-    from . import (bsp_throughput, kernels_bench, query_throughput, roofline,
-                   sa_throughput, segments_bench, serve_slo, supersteps,
-                   table1_example, table2_covers, table3_rounds)
+    from . import (bsp_throughput, data_plane_bench, kernels_bench,
+                   query_throughput, roofline, sa_throughput, segments_bench,
+                   serve_slo, supersteps, table1_example, table2_covers,
+                   table3_rounds)
     mods = [table1_example, table2_covers, table3_rounds, supersteps,
-            sa_throughput, query_throughput, segments_bench, kernels_bench,
-            bsp_throughput, serve_slo]
+            sa_throughput, query_throughput, segments_bench,
+            data_plane_bench, kernels_bench, bsp_throughput, serve_slo]
     if args.roofline:
         mods.insert(mods.index(bsp_throughput), roofline)
-    # the harness runs the distributed + serving benches in smoke mode
-    # (full grids are dedicated runs of those modules)
+    # the harness runs the distributed + serving + data-plane benches in
+    # smoke mode (full grids are dedicated runs of those modules)
     modargs = {bsp_throughput: ["--smoke", "--out", ""],
                segments_bench: ["--smoke", "--out", ""],
+               data_plane_bench: ["--smoke", "--out", ""],
                serve_slo: ["--smoke", "--out", ""]}
     failed = []
     for m in mods:

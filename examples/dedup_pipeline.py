@@ -1,40 +1,61 @@
-"""The paper inside the LM stack: suffix-array exact-substring dedup as a
-data-pipeline stage (Lee et al. 2022-style), feeding training batches.
-Suffix arrays are built through the `repro.api` facade — swap the backend
-(or hand the plan a mesh for the distributed builder) without touching the
-pipeline.
+"""The paper inside the LM stack: the SA-backed streaming training data
+plane. Document shards arrive one at a time; each is deduplicated against
+everything seen so far (exact-substring, Lee et al. 2022-style) with ONE
+suffix-array segment build per shard, a held-out eval set gates training
+windows for contamination, and a probe scores sequences for verbatim
+copies of the training data. Suffix arrays are built through the
+`repro.api` facade — swap the backend (or hand the plan a mesh for the
+distributed builder) without touching the plane.
 
     PYTHONPATH=src python examples/dedup_pipeline.py
 """
 import numpy as np
 
-from repro.api import SAOptions, SuffixArrayIndex
-from repro.data.pipeline import PipelineConfig, TokenPipeline, synthetic_corpus
-from repro.text.dedup import find_duplicates, report_duplicates
+from repro.data.pipeline import (PipelineConfig, TrainingDataPlane,
+                                 synthetic_corpus, synthetic_doc_shards)
+from repro.text.dedup import dedup_docs, find_duplicates
 
 
 def main():
-    corpus = synthetic_corpus(60_000, vocab=256, dup_fraction=0.35, seed=7)
-    opts = SAOptions()                      # auto → jax (no mesh supplied)
-    print(f"backend: {opts.resolve_backend()}")
+    shards = synthetic_doc_shards(60_000, vocab=256, shard_docs=8,
+                                  doc_len=2048, dup_fraction=0.35, seed=7)
+    eval_docs = [synthetic_corpus(2048, vocab=256, seed=100 + j)
+                 for j in range(3)]
+    # plant one contaminated stretch so the gate has a real positive
+    shards[0][0][500:900] = eval_docs[0][:400]
 
-    index = SuffixArrayIndex.build(corpus, opts)
-    rep = report_duplicates(index, min_len=64)
-    print(f"corpus: {rep.n_chars} chars, duplicated: {rep.dup_chars} "
-          f"({100 * rep.dup_fraction:.1f}%) across {len(rep.spans)} spans")
-    # the same index answers content queries before dedup runs
-    probe = corpus[100:116]
-    print(f"16-gram at offset 100 occurs {index.count(probe)}× pre-dedup")
+    cfg = PipelineConfig(seq_len=128, global_batch=8, dedup=True,
+                         dedup_min_len=64, gate_min_len=64,
+                         gate_policy="reject", vocab=256)
+    plane = TrainingDataPlane(cfg, eval_docs=eval_docs)
+    for k, shard in enumerate(shards):
+        st = plane.ingest_shard(shard)
+        print(f"shard {k}: {st.chars} chars in, {st.dropped_chars} dropped "
+              f"({st.prior_hits} prior-shard grams, {st.within_hits} "
+              f"within-shard), {st.builds} segment build")
+    rep = plane.report
+    print(f"total: {rep.n_chars} chars → {rep.kept_chars} "
+          f"({100 * rep.dup_fraction:.1f}% removed), "
+          f"{rep.builds} builds for {rep.shards} shards")
 
-    pipe = TokenPipeline(corpus, PipelineConfig(
-        seq_len=128, global_batch=8, dedup=True, dedup_min_len=64))
-    print(f"after dedup stage: {pipe.n} chars "
-          f"(-{rep.n_chars - pipe.n})")
-    b = pipe.batch_at(0)
-    print("first batch:", b["tokens"].shape, b["tokens"].dtype)
+    # streaming output is byte-identical to a monolithic whole-corpus pass
+    mono, _ = dedup_docs([d for s in shards for d in s], min_len=64,
+                         sigma=256)
+    assert all(np.array_equal(a, b) for a, b in zip(plane._kept, mono))
+    print("streaming == monolithic: byte-identical")
+
     # dedup is idempotent: a second pass finds (almost) nothing
-    rep2 = find_duplicates(pipe.corpus, min_len=64, options=opts)
+    rep2 = find_duplicates(plane.corpus, min_len=64)
     print(f"residual duplication: {100 * rep2.dup_fraction:.2f}%")
+
+    # gated batches: contaminated windows are resampled (policy "reject")
+    b = plane.batch_at(0)
+    print("first batch:", b["tokens"].shape, "gate:", plane.gate_stats())
+
+    # memorization probe: a verbatim training excerpt vs a fresh sequence
+    excerpt = shards[1][2][300:500]
+    fresh = synthetic_corpus(200, vocab=256, seed=999)
+    print("probe:", plane.probe([excerpt, fresh], min_len=64))
 
 
 if __name__ == "__main__":

@@ -3,21 +3,32 @@ synthetic corpus, with checkpoints + resume (the deliverable-(b) trainer).
 
     PYTHONPATH=src python examples/train_lm.py            # ~5M params
     PYTHONPATH=src python examples/train_lm.py --100m     # ~100M params
+
+Extra flags pass straight through to `repro.launch.train.main`, e.g.::
+
+    PYTHONPATH=src python examples/train_lm.py --dedup --eval-gate \\
+        --plant-contamination 40
 """
+import math
 import sys
 
-sys.argv = [sys.argv[0], "--arch", "minicpm-2b", "--smoke",
+from repro.launch.train import main
+
+DEFAULTS = ["--arch", "minicpm-2b", "--smoke",
             "--steps", "200", "--seq-len", "128", "--batch", "8",
             "--ckpt-dir", "/tmp/repro_ckpt", "--ckpt-every", "100",
-            "--lr", "3e-3"] + (
-    ["--no-op"] if False else [])
-if "--100m" in sys.argv:
-    sys.argv.remove("--100m")
-    # ~100M config: full-width but shallow (CPU-feasible for a demo)
-    sys.argv += ["--corpus-chars", "400000"]
-
-from repro.launch.train import main  # noqa: E402
+            "--lr", "3e-3"]
 
 if __name__ == "__main__":
-    loss = main()
-    assert loss < 5.0, "training diverged"
+    # user args first, then defaults: argparse keeps the LAST occurrence
+    # of a repeated flag, so anything the user passes wins
+    user = sys.argv[1:]
+    if "--100m" in user:
+        user.remove("--100m")
+        # ~100M config: full-width but shallow (CPU-feasible for a demo)
+        user += ["--corpus-chars", "400000"]
+    report = main(DEFAULTS + user)
+    # the <5.0 convergence bar assumes the default 200-step run
+    bar = float("inf") if "--steps" in user else 5.0
+    assert math.isfinite(report["loss"]), "training diverged"
+    assert report["loss"] < bar, "training diverged"

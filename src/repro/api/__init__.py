@@ -84,7 +84,8 @@ Quickstart
 """
 from .build import (build_suffix_array, builder_cache_stats,
                     clear_builder_cache)
-from .index import NgramStats, SuffixArrayIndex, encode_docs
+from .index import (NgramStats, SuffixArrayIndex, encode_docs,
+                    longest_match_len)
 from .options import SAOptions, SCHEDULES, SORT_IMPLS
 from .query import (QueryBatch, QuerySession, clear_query_cache,
                     query_cache_stats)
@@ -116,6 +117,7 @@ __all__ = [
     "encode_docs",
     "get_backend",
     "load_index",
+    "longest_match_len",
     "query_cache_stats",
     "register_backend",
     "registered_backends",

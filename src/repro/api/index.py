@@ -43,6 +43,45 @@ from .options import SAOptions
 from .query import QueryBatch, batch_ranges, stage_batch
 
 
+def longest_match_len(index, seq) -> int:
+    """Length of the longest substring of ``seq`` that occurs in ``index``.
+
+    Works against anything with ``contains_batch`` (monolithic
+    `SuffixArrayIndex` or `repro.api.SegmentedIndex`). Feasibility is
+    monotone in the length (a substring's prefixes occur wherever it
+    does), so a binary search over lengths resolves the answer with
+    O(log |seq|) batched containment queries — each one jitted call
+    testing *every* window of the probed length at once. This is the
+    overlap primitive behind the memorization probe and contamination
+    reporting in `repro.data.pipeline`.
+
+    Out-of-alphabet values in ``seq`` can never match, so they are masked
+    out up front (windows containing them are skipped, not errors) —
+    generated samples may legally contain tokens the corpus never used.
+    """
+    seq = np.asarray(seq, np.int64).ravel()
+    if len(seq) == 0 or index.n == 0:
+        return 0
+    ok = (seq >= 0) & (seq < max(index.sigma, 1))
+
+    def feasible(m: int) -> bool:
+        wins = np.lib.stride_tricks.sliding_window_view(seq, m)
+        valid = np.flatnonzero(
+            np.lib.stride_tricks.sliding_window_view(ok, m).all(axis=1))
+        if not len(valid):
+            return False
+        return bool(np.any(index.contains_batch(list(wins[valid]))))
+
+    lo, hi = 0, len(seq)            # longest feasible is in [lo, hi]
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if feasible(mid):
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
 def encode_docs(docs) -> tuple[np.ndarray, np.ndarray, int]:
     """Sentinel-separator corpus layout: data values are shifted up by
     n_docs and doc i is terminated by separator value i. Separators are
@@ -383,6 +422,11 @@ class SuffixArrayIndex:
         pos = self.locate(pattern)
         doc, off = self.doc_offset(pos)
         return np.stack([np.asarray(doc, np.int64), off], axis=1)
+
+    def longest_match(self, seq) -> int:
+        """Longest substring of ``seq`` occurring anywhere in the index
+        (`longest_match_len`) — the memorization-probe primitive."""
+        return longest_match_len(self, seq)
 
     # ---------------------------------------------------------- statistics
     def ngram_stats(self, k: int) -> NgramStats:

@@ -40,7 +40,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .index import SuffixArrayIndex
+from .index import SuffixArrayIndex, longest_match_len
 from .options import SAOptions
 from .query import QueryBatch, batch_ranges, stage_batch
 
@@ -318,6 +318,15 @@ class SegmentedIndex:
         return self.locate_batch([pattern])[0]
 
     locate_docs = locate               # monolithic-compatible spelling
+
+    def longest_match(self, seq) -> int:
+        """Longest substring of ``seq`` occurring anywhere in the corpus —
+        same semantics as `SuffixArrayIndex.longest_match`, resolved
+        through the per-segment fan-out (each containment probe is one
+        merged `contains_batch`). The memorization probe in
+        `repro.data.pipeline` runs this against the streaming training
+        index."""
+        return longest_match_len(self, seq)
 
     # ------------------------------------------------- serving-tier protocol
     def stage_encoded(self, enc):

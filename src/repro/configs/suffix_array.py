@@ -43,6 +43,26 @@ class SAConfig:
                                 # one-segment-per-ingest path in launch/serve)
     compact_fanin: int = 4      # size-tiered compaction trigger
                                 # (SAOptions.compact_fanin)
+    gc_hygiene: bool = True     # SAServer GC regime: pin gen-2 thresholds
+                                # + freeze the index after warmup
+    # ---- training data plane (repro.data.pipeline) ----
+    dedup_min_len: int = 48     # exact-substring dedup bar
+                                # (= repro.text.dedup.DEDUP_MIN_LEN)
+    gate_min_len: int = 48      # train/eval contamination-gate gram length
+    gate_policy: str = "reject"  # "reject" | "mask"
+                                # (repro.data.pipeline.GATE_POLICIES)
+    shard_docs: int = 8         # documents per streamed ingest shard
+
+    def to_pipeline(self, *, seq_len: int = 512, global_batch: int = 8,
+                    dedup: bool = True, vocab=None, seed: int = 0):
+        """A `repro.data.pipeline.PipelineConfig` carrying this config's
+        data-plane knobs (the SA plan rides along via `to_options`)."""
+        from ..data.pipeline import PipelineConfig
+        return PipelineConfig(
+            seq_len=seq_len, global_batch=global_batch, dedup=dedup,
+            dedup_min_len=self.dedup_min_len, seed=seed,
+            options=self.to_options(), vocab=vocab,
+            gate_min_len=self.gate_min_len, gate_policy=self.gate_policy)
 
     def to_options(self, *, mesh=None, counters=None, stats=None):
         """The `repro.api.SAOptions` plan this config describes. Runtime

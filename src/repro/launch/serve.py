@@ -204,7 +204,8 @@ def serve_sa_queries(cfg, *, n_chars: int, n_docs: int, n_queries: int,
 
     server = SAServer(index, max_batch=batch,
                       coalesce_max_wait_us=wait_us, queue_depth=depth,
-                      overload_policy=policy).start()
+                      overload_policy=policy,
+                      gc_hygiene=cfg.gc_hygiene).start()
     t0 = time.time()
     shapes = server.warmup(pattern_lens=(pattern_len,))
     print(f"warmup: {shapes} kernel shapes compiled in "

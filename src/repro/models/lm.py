@@ -307,7 +307,8 @@ def forward_hidden(params, cfg: ModelConfig, tokens=None, embeds=None, *,
 # --------------------------------------------------------------------------
 def lm_loss(params, cfg: ModelConfig, batch: dict, *, mesh=None):
     """batch: {"tokens": [B, S+1] int32} (+ "enc_embeds" for enc-dec,
-    "embeds" for stub frontends). Returns (loss, metrics)."""
+    "embeds" for stub frontends, "loss_mask" [B, S] to drop targets —
+    the contamination gate's mask policy). Returns (loss, metrics)."""
     tokens = batch["tokens"]
     inputs, targets = tokens[:, :-1], tokens[:, 1:]
     enc_out = None
@@ -318,7 +319,8 @@ def lm_loss(params, cfg: ModelConfig, batch: dict, *, mesh=None):
         params, cfg, tokens=None if embeds is not None else inputs,
         embeds=embeds, enc_out=enc_out, mesh=mesh)
     loss, wt = chunked_softmax_xent(
-        hidden, params["embed"], targets, cap=cfg.logit_softcap)
+        hidden, params["embed"], targets, mask=batch.get("loss_mask"),
+        cap=cfg.logit_softcap)
     total = loss + 0.01 * aux
     return total, {"xent": loss, "aux": aux, "tokens": wt}
 

@@ -74,7 +74,10 @@ class ServeMetrics:
     """All serving-tier instrumentation for one `SAServer`."""
 
     #: admission/lifecycle counter names, in reporting order
-    COUNTERS = ("submitted", "accepted", "rejected", "shed", "completed")
+    #: (gc_pauses: full collections observed while the serving loops ran —
+    #: the GC-hygiene regime in `SAServer` keeps it near zero)
+    COUNTERS = ("submitted", "accepted", "rejected", "shed", "completed",
+                "gc_pauses")
 
     def __init__(self):
         self.queue_wait_us = Histogram("queue_wait_us")

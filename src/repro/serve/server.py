@@ -38,6 +38,7 @@ its *scheduled* arrival, so loadgen lateness counts against the server
 from __future__ import annotations
 
 import collections
+import gc
 import itertools
 import queue
 import threading
@@ -57,6 +58,11 @@ __all__ = ["Response", "SAServer", "POLICIES"]
 
 #: EMA weight for the per-request service-cost estimate (retry-after hints)
 _EMA_ALPHA = 0.2
+
+#: pinned GC thresholds while the serving loops run: gen-0/1 stay at the
+#: CPython defaults, gen-2 is pushed out 1000× so full collections — the
+#: pauses that walk the entire (index-sized) heap — can't fire mid-batch.
+_SERVE_GC_THRESHOLDS = (700, 10, 10_000)
 
 
 @dataclass(frozen=True)
@@ -102,6 +108,13 @@ class SAServer:
       latency a lone request can pay for the chance of sharing a kernel.
     * `queue_depth` / `overload_policy` / `max_queue_age_us` — admission
       control (`repro.serve.admission`).
+    * `gc_hygiene` — latency hygiene for the (process-global) cyclic GC:
+      while the loops run, gen-2 thresholds are pinned high
+      (`_SERVE_GC_THRESHOLDS`) so full heap walks can't land mid-batch,
+      and after `warmup()` the loaded index + compiled caches are
+      `gc.freeze()`-d out of every future collection. Any full collection
+      that still happens in-loop bumps the `gc_pauses` metric counter.
+      `stop()` restores the previous thresholds and unfreezes.
     """
 
     def __init__(self, index, *, max_batch: int = 256,
@@ -109,7 +122,8 @@ class SAServer:
                  queue_depth: int = 1024,
                  overload_policy: str = "reject",
                  max_queue_age_us: Optional[float] = None,
-                 metrics: Optional[ServeMetrics] = None):
+                 metrics: Optional[ServeMetrics] = None,
+                 gc_hygiene: bool = True):
         self.index = index
         self.coalescer = Coalescer(max_batch=max_batch,
                                    max_wait_us=coalesce_max_wait_us)
@@ -127,12 +141,19 @@ class SAServer:
         self._running = False
         self._stopping = False
         self._threads: list[threading.Thread] = []
+        self.gc_hygiene = gc_hygiene
+        self._gc_saved_thresholds: Optional[tuple] = None
+        self._gc_frozen = False
 
     # ----------------------------------------------------------- lifecycle
     def start(self) -> "SAServer":
         if self._running:
             return self
         self._running, self._stopping = True, False
+        if self.gc_hygiene:
+            self._gc_saved_thresholds = gc.get_threshold()
+            gc.set_threshold(*_SERVE_GC_THRESHOLDS)
+            gc.callbacks.append(self._on_gc)
         self._threads = [
             threading.Thread(target=self._coalesce_loop,
                              name="sa-serve-coalesce", daemon=True),
@@ -144,7 +165,8 @@ class SAServer:
         return self
 
     def stop(self, timeout: float = 30.0) -> None:
-        """Drain every pending request, then stop both loops."""
+        """Drain every pending request, then stop both loops (and hand the
+        process-global GC state back the way it was found)."""
         if not self._running:
             return
         with self._cond:
@@ -153,6 +175,22 @@ class SAServer:
         for t in self._threads:
             t.join(timeout)
         self._running = False
+        if self._on_gc in gc.callbacks:
+            gc.callbacks.remove(self._on_gc)
+        if self._gc_frozen:
+            gc.unfreeze()
+            self._gc_frozen = False
+        if self._gc_saved_thresholds is not None:
+            gc.set_threshold(*self._gc_saved_thresholds)
+            self._gc_saved_thresholds = None
+
+    def _on_gc(self, phase: str, info: dict) -> None:
+        """`gc.callbacks` hook: count full collections that land while the
+        serving loops are live — each one is a stop-the-world heap walk the
+        latency histograms would otherwise show as an anonymous p99 spike."""
+        if (phase == "stop" and info.get("generation") == 2
+                and self._running):
+            self.metrics.bump("gc_pauses")
 
     def __enter__(self) -> "SAServer":
         return self.start()
@@ -184,6 +222,20 @@ class SAServer:
                 self.index.count_batch(pats)
                 done += 1
         self.warmed_shapes += done
+        if self.gc_hygiene and done:
+            # everything alive now — the index, its SA/LCP arrays, the
+            # freshly-compiled query kernels — is long-lived state. One
+            # deliberate full collection while off the clock (not counted
+            # as an in-loop pause), then freeze it all out of every future
+            # GC pass.
+            observed = self._on_gc in gc.callbacks
+            if observed:
+                gc.callbacks.remove(self._on_gc)
+            gc.collect()
+            gc.freeze()
+            if observed:
+                gc.callbacks.append(self._on_gc)
+            self._gc_frozen = True
         return done
 
     # -------------------------------------------------------------- submit

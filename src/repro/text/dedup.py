@@ -3,9 +3,37 @@
 uses suffix arrays for exactly this; our distributed builder makes the SA
 step scale with the training mesh).
 
+The drop rule (shared by every path)
+------------------------------------
+A position ``p`` is **flagged** when the ``min_len``-gram starting at ``p``
+also occurs at an *earlier* corpus position (``keep_first=True``; the
+symmetric rule flags non-latest occurrences for ``keep_first=False``).
+The drop mask is the union of ``[p, p + min_len)`` over flagged ``p``.
+
+This is exactly the union of ``[p, p + LPF(p))`` over positions whose
+longest previous factor reaches ``min_len``: if a match of length
+``L ≥ min_len`` starts at ``p``, the shifted starts ``p+j`` (``j ≤ L -
+min_len``) are all flagged too, so the fixed-width intervals tile the whole
+``[p, p + L)`` span. Unlike the historical rule (paint the later suffix of
+each SA-*adjacent* pair), the gram rule is
+
+* **exact** — every non-leftmost occurrence of a repeat ≥ ``min_len`` is
+  dropped, even when three or more occurrences interleave in SA order and
+  adjacency skips one; and
+* **prefix-stable** — whether ``p`` is dropped depends only on content at
+  positions ``≤ p``, so a streaming pass over document shards
+  (`repro.data.pipeline.StreamingDedup`) produces byte-identical output to
+  a monolithic rebuild of the same corpus. That equality is pinned in
+  `tests/train/test_data_plane.py`.
+
 Construction goes through the `repro.api` facade: pass an `SAOptions` to
 pick the backend (`jax` by default, `bsp` when the plan carries a mesh).
 The legacy `sa_builder=` kwarg still works but is deprecated.
+
+The default threshold is pinned once, here: ``DEDUP_MIN_LEN = 48`` is the
+documented default for `dedup_corpus`, `dedup_docs`, and
+`repro.data.pipeline.PipelineConfig.dedup_min_len` (they used to disagree,
+48 vs 32).
 """
 from __future__ import annotations
 
@@ -16,16 +44,25 @@ import numpy as np
 
 from ..api import SAOptions, SuffixArrayIndex
 
+#: the one documented default for exact-substring dedup thresholds
+#: (Lee et al. 2022 use 50 BPE tokens; 48 is our byte-level pin).
+DEDUP_MIN_LEN = 48
+
 
 @dataclass
 class DedupReport:
     n_chars: int
-    dup_chars: int
+    dup_chars: int            # chars inside repeated regions (incl. firsts)
     spans: list
+    dropped_chars: int = 0    # chars actually removed by the drop rule
 
     @property
     def dup_fraction(self) -> float:
         return self.dup_chars / max(self.n_chars, 1)
+
+    @property
+    def dropped_fraction(self) -> float:
+        return self.dropped_chars / max(self.n_chars, 1)
 
 
 def _index_of(corpus: np.ndarray, sa_builder, options: SAOptions | None
@@ -38,7 +75,7 @@ def _index_of(corpus: np.ndarray, sa_builder, options: SAOptions | None
     return SuffixArrayIndex.build(corpus, options)
 
 
-def find_duplicates(corpus: np.ndarray, min_len: int = 32,
+def find_duplicates(corpus: np.ndarray, min_len: int = DEDUP_MIN_LEN,
                     sa_builder=None, options: SAOptions | None = None
                     ) -> DedupReport:
     corpus = np.asarray(corpus)
@@ -53,32 +90,103 @@ def report_duplicates(index: SuffixArrayIndex, min_len: int) -> DedupReport:
     return DedupReport(n_chars=index.n, dup_chars=int(dup), spans=spans)
 
 
-def dedup_corpus(corpus: np.ndarray, min_len: int = 32,
+def duplicate_gram_flags(index: SuffixArrayIndex, min_len: int,
+                         keep_first: bool = True) -> np.ndarray:
+    """bool[n] over *encoded* positions: True where the ``min_len``-gram
+    starting there also occurs at an earlier (``keep_first=True``) or later
+    (``keep_first=False``) encoded position.
+
+    Fully vectorised over the SA + LCP: consecutive SA ranks whose
+    pairwise LCP is ≥ ``min_len`` form a *run*, and a run is exactly the
+    occurrence set of one ``min_len``-gram (suffixes shorter than the gram
+    can never reach the LCP bar, and unique separators stop comparisons at
+    document boundaries, so runs never cross documents). Within a run,
+    every member except the extreme-position one is flagged. Singleton
+    runs flag nothing.
+    """
+    n = index.n
+    flags = np.zeros(n, bool)
+    if n == 0 or min_len <= 0 or min_len > n:
+        return flags
+    sa = index.sa.astype(np.int64)
+    lcp = index.lcp
+    new_run = np.ones(n, bool)
+    new_run[1:] = lcp[1:] < min_len
+    run_id = np.cumsum(new_run) - 1
+    n_runs = int(run_id[-1]) + 1
+    if keep_first:
+        extreme = np.full(n_runs, np.iinfo(np.int64).max)
+        np.minimum.at(extreme, run_id, sa)
+    else:
+        extreme = np.full(n_runs, -1)
+        np.maximum.at(extreme, run_id, sa)
+    flags[sa[sa != extreme[run_id]]] = True
+    return flags
+
+
+def gram_drop_mask(flags: np.ndarray, min_len: int) -> np.ndarray:
+    """Union of ``[p, p + min_len)`` over flagged positions, as bool[n].
+
+    Vectorised interval painting: +1/−1 deltas, cumsum > 0. Flagged
+    positions always carry ``min_len`` real characters (that is what got
+    them flagged), so the painted interval never spills past a document
+    separator or the end of the text.
+    """
+    n = len(flags)
+    at = np.flatnonzero(flags)
+    delta = np.zeros(n + 1, np.int64)
+    np.add.at(delta, at, 1)
+    np.add.at(delta, np.minimum(at + min_len, n), -1)
+    return np.cumsum(delta[:n]) > 0
+
+
+def dedup_corpus(corpus: np.ndarray, min_len: int = DEDUP_MIN_LEN,
                  sa_builder=None, keep_first: bool = True,
                  options: SAOptions | None = None
                  ) -> tuple[np.ndarray, DedupReport]:
-    """Remove all-but-first occurrences of repeated substrings ≥ min_len.
+    """Remove all-but-one occurrence of repeated substrings ≥ ``min_len``.
 
-    Conservative variant: drops later duplicate spans wholesale (the Lee et
-    al. policy); returns (deduped_corpus, report). The SA and LCP are built
-    once and shared between the report and the drop mask."""
+    ``keep_first=True`` (the Lee et al. policy) keeps the earliest copy of
+    each repeat and drops every later one; ``keep_first=False`` keeps the
+    latest. Returns ``(deduped_corpus, report)``; the report's ``spans``
+    still describe every repeated region (including the kept copy), while
+    ``dropped_chars`` counts what was actually removed. The SA and LCP are
+    built once and shared between the report and the drop mask. An empty
+    corpus round-trips to an empty corpus with an all-zero report.
+    """
     corpus = np.asarray(corpus)
     index = _index_of(corpus, sa_builder, options)
     report = report_duplicates(index, min_len)
     if not report.spans:
         return corpus, report
-    # keep the FIRST occurrence of each duplicated string: for every
-    # SA-adjacent pair with lcp ≥ min_len, drop the later (greater-position)
-    # copy. Vectorised interval painting: +1/-1 deltas, cumsum > 0.
-    n = index.n
-    sa, lcp = index.sa.astype(np.int64), index.lcp
-    r = np.flatnonzero(lcp >= min_len)
-    r = r[r >= 1]
-    a, b = sa[r - 1], sa[r]
-    target = np.maximum(a, b) if keep_first else np.minimum(a, b)
-    delta = np.zeros(n + 1, np.int64)
-    np.add.at(delta, target, 1)
-    np.add.at(delta, np.minimum(target + lcp[r], n), -1)
-    drop = np.cumsum(delta[:-1]) > 0
-    out = corpus[~drop]
+    flags = duplicate_gram_flags(index, min_len, keep_first=keep_first)
+    drop = gram_drop_mask(flags, min_len)
+    report.dropped_chars = int(drop.sum())
+    return corpus[~drop], report
+
+
+def dedup_docs(docs, min_len: int = DEDUP_MIN_LEN, *,
+               options: SAOptions | None = None, sigma: int | None = None,
+               keep_first: bool = True
+               ) -> tuple[list, DedupReport]:
+    """Document-aware monolithic dedup: one suffix array over all ``docs``
+    (sentinel-separator layout, so no repeat ever spans a document
+    boundary), the gram drop rule applied in global document order.
+
+    Returns ``(deduped_docs, report)`` where ``deduped_docs[i]`` is
+    ``docs[i]`` with its dropped positions removed. This is the
+    whole-corpus reference the streaming data plane
+    (`repro.data.pipeline.StreamingDedup`) is byte-identical to.
+    """
+    index = SuffixArrayIndex.from_docs(docs, options, sigma=sigma)
+    report = report_duplicates(index, min_len)
+    report.n_chars = int(sum(len(np.asarray(d).ravel()) for d in docs))
+    flags = duplicate_gram_flags(index, min_len, keep_first=keep_first)
+    drop = gram_drop_mask(flags, min_len)
+    report.dropped_chars = int(drop.sum())
+    out = []
+    ends = index._doc_ends
+    for s, e in zip(index.doc_starts, ends):
+        payload = index.text[s:e] - index.shift
+        out.append(payload[~drop[s:e]])
     return out, report

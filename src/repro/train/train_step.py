@@ -58,7 +58,9 @@ def make_train_step(cfg, tcfg: TrainConfig, mesh=None):
     """Returns train_step(state, batch) -> (state, metrics).
 
     batch leaves have leading dims [microbatches, per_mb_batch, ...] when
-    tcfg.microbatches > 1, else [batch, ...].
+    tcfg.microbatches > 1, else [batch, ...]. An optional "loss_mask"
+    leaf ([..., S] float32, 1 = count the target) flows through to
+    `lm_loss` and surfaces as a ``masked_frac`` metric.
     """
     _, opt_update = make_optimizer(tcfg.opt)
     sched = make_schedule(
@@ -91,6 +93,11 @@ def make_train_step(cfg, tcfg: TrainConfig, mesh=None):
     def train_step(state, batch):
         params = state["params"]
         loss, metrics, grads = compute_grads(params, batch)
+        if "loss_mask" in batch:
+            # fraction of targets zeroed by the contamination gate's mask
+            # policy (repro.data.pipeline.ContaminationGate)
+            mask = batch["loss_mask"]
+            metrics = dict(metrics, masked_frac=1.0 - jnp.mean(mask))
         grads, gnorm = clip_by_global_norm(grads, tcfg.opt.clip_norm)
         if tcfg.opt.compress:
             grads, new_err = compressed_grads_with_feedback(

@@ -54,3 +54,68 @@ def test_ngram_counts():
     lcp = lcp_kasai(x, sa)
     # distinct 2-grams: (0,1), (1,0) → 2
     assert ngram_counts(x, sa, lcp, 2) == 2
+
+
+# ---------------------------------------------------------------- drop rule
+def test_dedup_keep_first_keeps_earliest_copy():
+    rng = np.random.default_rng(2)
+    x = rng.integers(0, 64, 900)
+    x[600:700] = x[100:200]                    # plant: later copy of 100:200
+    out, rep = dedup_corpus(x, min_len=64, keep_first=True)
+    assert rep.dropped_chars >= 100
+    # the earliest copy survives verbatim at its original offset
+    assert np.array_equal(out[100:200], x[100:200])
+
+
+def test_dedup_keep_first_false_keeps_latest_copy():
+    rng = np.random.default_rng(2)
+    x = rng.integers(0, 64, 900)
+    x[600:700] = x[100:200]
+    out, rep = dedup_corpus(x, min_len=64, keep_first=False)
+    assert rep.dropped_chars >= 100
+    assert len(out) == 900 - rep.dropped_chars
+    # the latest copy survives: its 100 chars appear after position ~500
+    tail = out[-(900 - 600 - rep.dropped_chars + 100):]
+    window = np.lib.stride_tricks.sliding_window_view(tail, 100)
+    assert any(np.array_equal(w, x[600:700]) for w in window)
+
+
+def test_dedup_both_policies_drop_the_same_char_count():
+    rng = np.random.default_rng(3)
+    x = rng.integers(0, 32, 1200)
+    x[800:900] = x[50:150]
+    x[1000:1100] = x[50:150]                   # three interleaved copies
+    _, first = dedup_corpus(x, min_len=48, keep_first=True)
+    _, last = dedup_corpus(x, min_len=48, keep_first=False)
+    assert first.dropped_chars == last.dropped_chars >= 200
+
+
+def test_dedup_default_min_len_is_pinned():
+    # one documented default everywhere (48); the config used to say 48
+    # while dedup_corpus said 32
+    import inspect
+
+    from repro.data.pipeline import PipelineConfig
+    from repro.text.dedup import DEDUP_MIN_LEN, dedup_docs
+
+    assert DEDUP_MIN_LEN == 48
+    assert inspect.signature(dedup_corpus).parameters["min_len"].default \
+        == DEDUP_MIN_LEN
+    assert inspect.signature(dedup_docs).parameters["min_len"].default \
+        == DEDUP_MIN_LEN
+    assert PipelineConfig().dedup_min_len == DEDUP_MIN_LEN
+    assert PipelineConfig().gate_min_len == DEDUP_MIN_LEN
+
+
+def test_dedup_empty_corpus_roundtrips():
+    out, rep = dedup_corpus(np.zeros(0, np.int64))
+    assert len(out) == 0
+    assert rep.n_chars == rep.dup_chars == rep.dropped_chars == 0
+    assert rep.spans == []
+
+
+def test_dedup_no_spans_returns_corpus_unchanged():
+    x = np.arange(200)                         # all-distinct: nothing ≥ 48
+    out, rep = dedup_corpus(x)
+    assert np.array_equal(out, x)
+    assert rep.dup_chars == rep.dropped_chars == 0

@@ -105,3 +105,37 @@ def test_metrics_snapshot_absent_not_zero(index):
     assert snap["total_us"]["p99"] is not None
     assert snap["batch_size"]["count"] == 1
     assert 0 < snap["bucket_occupancy"]["max"] <= 1.0
+
+
+# ------------------------------------------------------------- GC hygiene
+def test_gc_hygiene_pins_thresholds_and_freezes(index):
+    import gc
+
+    base = gc.get_threshold()
+    srv = SAServer(index, max_batch=4)
+    with srv:
+        assert gc.get_threshold() != base          # gen-2 pinned out
+        assert gc.get_threshold()[:2] == base[:2]  # young gens untouched
+        srv.warmup(pattern_lens=(8,))
+        assert srv._gc_frozen and gc.get_freeze_count() > 0
+        # the deliberate warmup collection is off the clock
+        assert srv.metrics.counter("gc_pauses") == 0
+        assert srv.submit([0, 1]).result(timeout=30.0).ok
+        gc.collect()                               # in-loop full collection
+        assert srv.metrics.counter("gc_pauses") == 1
+    # stop() hands the process-global state back
+    assert gc.get_threshold() == base
+    assert gc.get_freeze_count() == 0
+    assert srv._on_gc not in gc.callbacks
+
+
+def test_gc_hygiene_opt_out(index):
+    import gc
+
+    base = gc.get_threshold()
+    with SAServer(index, gc_hygiene=False) as srv:
+        assert gc.get_threshold() == base
+        srv.warmup(pattern_lens=(8,))
+        assert not srv._gc_frozen
+        gc.collect()
+        assert srv.metrics.counter("gc_pauses") == 0

@@ -1,0 +1,259 @@
+"""The SA-backed training data plane: streaming dedup byte-identity +
+one-build-per-shard, the contamination gate's guarantees (100% planted
+recall, 0 false positives on a disjoint control set), probe metrics, and
+a subprocess train-smoke that sees gate/probe numbers in the step report."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import SegmentedIndex, SuffixArrayIndex, builder_cache_stats
+from repro.data.pipeline import (ContaminationGate, PipelineConfig,
+                                 TrainingDataPlane, synthetic_corpus,
+                                 synthetic_doc_shards)
+from repro.text.dedup import dedup_docs
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "src"))
+VOCAB = 64
+MIN_LEN = 24
+
+
+def _builds() -> int:
+    s = builder_cache_stats()
+    return s["hits"] + s["misses"]
+
+
+def make_shards(n_chars=50_000, shard_docs=5, doc_len=1200, dup=0.4, seed=3):
+    return synthetic_doc_shards(n_chars, VOCAB, shard_docs=shard_docs,
+                                doc_len=doc_len, dup_fraction=dup, seed=seed)
+
+
+# ---------------------------------------------------------- streaming dedup
+@pytest.mark.parametrize("shard_docs", [1, 4, 16])
+def test_streaming_dedup_byte_identical_to_monolithic(shard_docs):
+    """The acceptance bar: any sharding of the same corpus streams to the
+    exact bytes the whole-corpus `dedup_docs` pass produces."""
+    shards = make_shards(shard_docs=shard_docs)
+    docs = [d for s in shards for d in s]
+    plane = TrainingDataPlane(
+        PipelineConfig(dedup=True, dedup_min_len=MIN_LEN, vocab=VOCAB),
+        shards=shards)
+    mono, rep = dedup_docs(docs, min_len=MIN_LEN, sigma=VOCAB)
+    assert rep.dropped_chars > 0            # the corpus has real duplicates
+    assert len(plane._kept) == len(mono)
+    for a, b in zip(plane._kept, mono):
+        assert np.array_equal(a, b)
+    assert plane.report.dropped_chars == rep.dropped_chars
+    assert plane.report.kept_chars == sum(len(d) for d in mono)
+
+
+def test_streaming_dedup_one_segment_build_per_shard():
+    """Ingest cost contract, measured via builder-cache deltas: each shard
+    is exactly ONE new-segment build — prior-shard matching is pure
+    queries, never a rebuild."""
+    shards = make_shards(shard_docs=4)
+    plane = TrainingDataPlane(
+        PipelineConfig(dedup=True, dedup_min_len=MIN_LEN, vocab=VOCAB))
+    for shard in shards:
+        before = _builds()
+        st = plane.ingest_shard(shard)
+        assert _builds() - before == 1
+        assert st.builds == 1
+    assert plane.report.builds == len(shards)
+    assert len(plane.index.segments) == len(shards)
+
+
+def test_streaming_dedup_cross_shard_only_duplicates():
+    """A shard that repeats ONLY prior-shard content dedups to nothing but
+    its unique tail — via containment queries, not adjacency."""
+    rng = np.random.default_rng(7)
+    a = rng.integers(0, VOCAB, 2000)
+    fresh = rng.integers(0, VOCAB, 100)
+    plane = TrainingDataPlane(
+        PipelineConfig(dedup=True, dedup_min_len=MIN_LEN, vocab=VOCAB))
+    plane.ingest_shard([a])
+    st = plane.ingest_shard([np.concatenate([a[500:800], fresh])])
+    assert st.prior_hits > 0 and st.dropped_chars >= 300
+    assert np.array_equal(plane._kept[1], fresh)
+
+
+def test_plane_without_dedup_keeps_raw_bytes():
+    shards = make_shards(shard_docs=4, dup=0.0)
+    plane = TrainingDataPlane(PipelineConfig(vocab=VOCAB), shards=shards)
+    assert plane.index is None
+    assert plane.report.dropped_chars == 0
+    assert plane.n == sum(len(d) for s in shards for d in s)
+
+
+# ------------------------------------------------------- contamination gate
+def eval_and_control():
+    """Eval docs over symbols [0, 32); control windows over [32, 64) —
+    provably zero overlap, so any control hit is a false positive."""
+    rng = np.random.default_rng(11)
+    eval_docs = [rng.integers(0, 32, 2000) for _ in range(3)]
+    control = rng.integers(32, 64, size=(16, 3 * MIN_LEN))
+    return eval_docs, control
+
+
+def test_gate_flags_all_planted_none_disjoint():
+    eval_docs, control = eval_and_control()
+    gate = ContaminationGate(eval_docs, min_len=MIN_LEN, sigma=VOCAB)
+    planted = control.copy()
+    for i in range(len(planted)):       # plant an eval stretch ≥ min_len
+        src = int(i * 37 % (len(eval_docs[0]) - MIN_LEN))
+        planted[i, 5:5 + MIN_LEN] = eval_docs[0][src:src + MIN_LEN]
+    hits_p, mask_p = gate.check(planted)
+    hits_c, mask_c = gate.check(control)
+    assert (hits_p > 0).all()           # 100% of planted overlaps flagged
+    assert (hits_c == 0).all()          # 0 false positives, disjoint set
+    assert not mask_c.any()
+    # the mask covers the planted chars and nothing left of them
+    assert mask_p[:, 5:5 + MIN_LEN].all()
+    assert not mask_p[:, :5].any()
+
+
+def test_gate_reject_policy_resamples_deterministically():
+    eval_docs, _ = eval_and_control()
+    # training corpus heavily contaminated → rejections guaranteed
+    rng = np.random.default_rng(12)
+    doc = rng.integers(32, 64, 6000)
+    doc[1000:3000] = np.concatenate([eval_docs[0], eval_docs[0]])[:2000]
+    cfg = PipelineConfig(seq_len=48, global_batch=8, gate_min_len=MIN_LEN,
+                         gate_policy="reject", vocab=VOCAB, seed=5)
+    p1 = TrainingDataPlane(cfg, eval_docs=eval_docs, shards=[[doc]])
+    p2 = TrainingDataPlane(cfg, eval_docs=eval_docs, shards=[[doc]])
+    for step in range(4):
+        b1, b2 = p1.batch_at(step), p2.batch_at(step)
+        assert np.array_equal(b1["tokens"], b2["tokens"])
+        assert np.array_equal(b1["loss_mask"], b2["loss_mask"])
+    assert p1.gate.stats["rejected_windows"] > 0
+    assert p1.gate.stats == p2.gate.stats
+
+
+def test_gate_mask_policy_zeroes_contaminated_targets():
+    eval_docs, _ = eval_and_control()
+    rng = np.random.default_rng(13)
+    doc = rng.integers(32, 64, 4000)
+    doc[:2000] = eval_docs[0]           # first half is pure eval text
+    cfg = PipelineConfig(seq_len=48, global_batch=16, gate_min_len=MIN_LEN,
+                         gate_policy="mask", vocab=VOCAB)
+    plane = TrainingDataPlane(cfg, eval_docs=eval_docs, shards=[[doc]])
+    b = plane.batch_at(0)
+    assert b["loss_mask"].shape == (16, 48)
+    assert b["loss_mask"].dtype == np.float32
+    assert plane.gate.stats["masked_windows"] > 0
+    # a fully-contaminated window trains on zero targets
+    full = plane.gate.check(doc[None, :49])[0]
+    assert full[0] > 0
+    masked = plane.batch_at(0)["loss_mask"]
+    assert masked.min() == 0.0 or plane.gate.stats["masked_windows"] > 0
+
+
+def test_gate_mask_feeds_loss_and_masked_frac_metric():
+    """loss_mask flows batch → lm_loss → chunked xent; masked targets
+    change the loss and surface as the masked_frac metric."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.models.lm import lm_init, lm_loss
+    from repro.train.optim import OptConfig
+    from repro.train.train_step import (TrainConfig, make_train_state,
+                                        make_train_step)
+    cfg = get_config("minicpm_2b").smoke()
+    params, _ = lm_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, (2, 17)).astype(np.int32)
+    full = {"tokens": toks, "loss_mask": np.ones((2, 16), np.float32)}
+    half_mask = np.ones((2, 16), np.float32)
+    half_mask[:, 8:] = 0.0
+    half = {"tokens": toks, "loss_mask": half_mask}
+    l_full, m_full = lm_loss(params, cfg, full)
+    l_half, m_half = lm_loss(params, cfg, half)
+    assert float(m_full["tokens"]) == 32 and float(m_half["tokens"]) == 16
+    assert not np.isclose(float(l_full), float(l_half))
+    step = jax.jit(make_train_step(cfg, TrainConfig(opt=OptConfig())))
+    state = make_train_state(params, TrainConfig(opt=OptConfig()))
+    _, metrics = step(state, half)
+    assert np.isclose(float(metrics["masked_frac"]), 0.5)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+# ----------------------------------------------------------- probe metrics
+def test_longest_match_monolithic_and_segmented():
+    rng = np.random.default_rng(21)
+    docs = [rng.integers(0, VOCAB, 1500) for _ in range(4)]
+    mono = SuffixArrayIndex.from_docs(docs, sigma=VOCAB)
+    seg = SegmentedIndex.from_docs(docs, segment_docs=2, sigma=VOCAB)
+    verbatim = docs[1][200:500]
+    fresh = rng.integers(0, VOCAB, 300)
+    for idx in (mono, seg):
+        assert idx.longest_match(verbatim) == 300
+        assert idx.longest_match(fresh) < MIN_LEN
+        assert idx.longest_match(np.zeros(0, np.int64)) == 0
+        # out-of-alphabet symbols never match (generated tokens may
+        # exceed the corpus alphabet)
+        weird = np.concatenate([verbatim[:50], [VOCAB + 7], verbatim[:50]])
+        assert idx.longest_match(weird) == 50
+
+
+def test_plane_probe_reports_copy_metrics():
+    shards = make_shards(shard_docs=4)
+    plane = TrainingDataPlane(
+        PipelineConfig(dedup=True, dedup_min_len=MIN_LEN, vocab=VOCAB),
+        shards=shards)
+    excerpt = shards[0][0][100:340]     # raw doc slice — what the index holds
+    fresh = np.random.default_rng(22).integers(0, VOCAB, 240)
+    m = plane.probe([excerpt, fresh], min_len=100)
+    assert m["samples"] == 2
+    assert m["longest_copy_max"] >= 240
+    assert m["frac_memorized"] == 0.5
+    with pytest.raises(RuntimeError):
+        TrainingDataPlane(PipelineConfig(vocab=VOCAB)).probe([excerpt])
+
+
+# ------------------------------------------------ legacy facade + launcher
+def test_token_pipeline_facade_matches_legacy_batching():
+    """dedup=False batches are the historical pure-(seed, step) windows
+    over the raw corpus — resume determinism unchanged."""
+    corpus = synthetic_corpus(16_000, vocab=VOCAB, seed=1)
+    from repro.data.pipeline import TokenPipeline
+    pipe = TokenPipeline(corpus, PipelineConfig(seq_len=32, global_batch=4,
+                                                seed=9))
+    assert np.array_equal(pipe.corpus, corpus)
+    rng = np.random.default_rng(np.random.SeedSequence([9, 3]))
+    starts = rng.integers(0, max(1, len(corpus) - 33), size=4)
+    want = np.stack([corpus[s:s + 33] for s in starts])
+    got = pipe.batch_at(3)
+    assert set(got) == {"tokens"}
+    assert np.array_equal(got["tokens"], want)
+
+
+def test_train_smoke_subprocess_gate_and_probe_in_report():
+    """The CI train-smoke path: planted contamination must surface as
+    rejected windows, the probe must log copy metrics, loss stays finite."""
+    code = textwrap.dedent("""
+    import json, math
+    from repro.launch.train import main
+    m = main(["--arch", "minicpm-2b", "--smoke", "--steps", "4",
+              "--seq-len", "48", "--batch", "4", "--corpus-chars", "30000",
+              "--doc-len", "1500", "--shard-docs", "5", "--dedup",
+              "--dedup-min-len", "24", "--eval-gate", "--gate-min-len", "24",
+              "--plant-contamination", "40", "--probe-every", "2",
+              "--probe-len", "8", "--log-every", "2"])
+    assert m["gate"]["rejected_windows"] > 0, m
+    assert m["probe"]["samples"] > 0, m
+    assert math.isfinite(m["loss"]), m
+    assert m["dedup"]["builds"] == m["dedup"]["shards"] > 1, m
+    print("TRAIN_SMOKE_OK", json.dumps(m))
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["JAX_PLATFORMS"] = "cpu"
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=420)
+    assert "TRAIN_SMOKE_OK" in r.stdout, (r.stdout[-2000:], r.stderr[-3000:])
+    # gate + probe numbers appear in the human step report too
+    assert "gate[rej" in r.stdout and "copy[max" in r.stdout
