@@ -185,6 +185,7 @@ def _ranges_kernel(text, sa, pats, lens):
     a shape-derived Python int, so the whole search is one fori_loop in
     one XLA computation.
     """
+    # saca-lint: allow[TRACE001] deliberate: trace-time retrace counter, mutated only while tracing, read by tests via total_traces()
     TRACE_COUNTS["ranges_kernel"] += 1
     n = text.shape[0]
     B, L = pats.shape

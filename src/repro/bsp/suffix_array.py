@@ -363,6 +363,10 @@ def suffix_array_bsp(
         _round_cost("SM1", n_loc, m_loc, p, v, dsize, w1 + 2, counters)
         _check_overflow(over, "SM1")
 
+        # saca-lint: allow[SCHED001] host-uniform by construction: `distinct`
+        # is a fully-replicated stage output (per-shard flags gathered via
+        # out_specs) and the single host driver ANDs it — every rank follows
+        # the same branch, so the recursion depth is globally consistent.
         if bool(np.asarray(distinct).all()):
             sa_rank = xprime                                  # ranks are final
         else:

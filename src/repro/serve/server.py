@@ -149,7 +149,11 @@ class SAServer:
     def start(self) -> "SAServer":
         if self._running:
             return self
-        self._running, self._stopping = True, False
+        with self._cond:
+            # `_stopping` is read by the coalesce loop; take the lock even
+            # though the threads don't exist yet, so a racing stop()/start()
+            # pair can't interleave the flag writes.
+            self._running, self._stopping = True, False
         if self.gc_hygiene:
             self._gc_saved_thresholds = gc.get_threshold()
             gc.set_threshold(*_SERVE_GC_THRESHOLDS)
@@ -349,10 +353,14 @@ class SAServer:
             t_done = time.perf_counter()
             service_us = (t_done - t_dispatch) * 1e6
             per_req = service_us / max(len(reqs), 1)
-            self._ema_us_per_req = (
-                per_req if self._ema_us_per_req is None else
-                _EMA_ALPHA * per_req +
-                (1 - _EMA_ALPHA) * self._ema_us_per_req)
+            with self._cond:
+                # submit() reads the EMA under the lock for retry-after
+                # hints; an unlocked read-modify-write here could publish a
+                # torn/stale estimate to the admission controller.
+                self._ema_us_per_req = (
+                    per_req if self._ema_us_per_req is None else
+                    _EMA_ALPHA * per_req +
+                    (1 - _EMA_ALPHA) * self._ema_us_per_req)
             self.metrics.service_us.add(service_us)
             for r, l, h in zip(reqs, lo, hi):
                 queue_us = (t_dispatch - r.t_arrival) * 1e6

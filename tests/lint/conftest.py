@@ -1,0 +1,6 @@
+import os
+import sys
+
+# `tools.saca_lint` lives at the repo root (not under src/), mirroring how
+# CI invokes it: `python -m tools.saca_lint` from the checkout root.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", ".."))

@@ -1,0 +1,32 @@
+"""Pragma semantics fixture: justified / unjustified / stale / standalone."""
+import collections
+
+import jax
+
+COUNTS = collections.Counter()
+OTHER = collections.Counter()
+THIRD = collections.Counter()
+
+
+@jax.jit
+def justified(x):
+    COUNTS["a"] += 1  # saca-lint: allow[TRACE001] fixture: deliberate trace counter
+    return x
+
+
+@jax.jit
+def unjustified(x):
+    OTHER["b"] += 1  # saca-lint: allow[TRACE001]
+    return x
+
+
+@jax.jit
+def standalone_pragma(x):
+    # saca-lint: allow[TRACE001] fixture: pragma on the line above
+    # (second comment line, pragma must skip past it too)
+    THIRD["c"] += 1
+    return x
+
+
+def stale_pragma(x):
+    return x + 1  # saca-lint: allow[THREAD001] fixture: nothing to suppress here

@@ -1,0 +1,98 @@
+"""Planted-regression fixture: `repro.bsp.psort.psort_shard_body` with a
+data-dependent branch around the rebalance count-gather.
+
+The plant (marked ``PLANTED-DIVERGENT`` below) is the classic BSP deadlock
+shape: a shard that received no rows after the bucket exchange "skips" the
+``all_gather`` that every other shard still executes, so the mesh hangs at
+the next collective. `tests/lint/test_saca_lint.py` asserts the schedule
+extractor reports SCHED001 at exactly that line.
+
+Not imported at runtime — parsed by saca-lint only.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bsp.exchange import exchange
+from repro.bsp.primitives import searchsorted_rows
+
+INT32_MAX = np.iinfo(np.int32).max
+
+
+def make_pad_rows(k, W):
+    return jnp.full((k, W), INT32_MAX, dtype=jnp.int32)
+
+
+def local_sort_lex(rows):
+    return rows[jnp.argsort(rows[:, 0], stable=True)]
+
+
+def lex_lt_full(a, b):
+    return a[..., 0] < b[..., 0]
+
+
+def psort_shard_body(rows, *, p, axis, lt_fn=None, local_sort=None):
+    if lt_fn is None:
+        lt_fn = lex_lt_full
+    if local_sort is None:
+        local_sort = local_sort_lex
+    m, W = rows.shape
+
+    # --- 1. local sort ---
+    rows = local_sort(rows)
+    nvalid = jnp.sum((rows[:, 0] == 0).astype(jnp.int32))
+
+    # --- 2. p+1 equally spaced primary samples ---
+    t = jnp.arange(p + 1, dtype=jnp.int32)
+    samp_idx = jnp.where(
+        nvalid > 0,
+        (t.astype(jnp.int64) * jnp.maximum(nvalid - 1, 0) // p).astype(jnp.int32),
+        0)
+    primary = rows[samp_idx]
+    primary = jnp.where((nvalid > 0), primary, make_pad_rows(p + 1, W))
+
+    # --- 3. gather all p(p+1) samples everywhere ---
+    all_samples = jax.lax.all_gather(primary, axis).reshape(p * (p + 1), W)
+    all_samples = local_sort(all_samples)
+    ns = jnp.sum((all_samples[:, 0] == 0).astype(jnp.int32))
+
+    # --- 4. p-1 secondary splitters -> p buckets ---
+    tt = jnp.arange(1, p, dtype=jnp.int32)
+    sec_idx = jnp.where(
+        ns > 0,
+        (tt.astype(jnp.int64) * jnp.maximum(ns - 1, 0) // p).astype(jnp.int32),
+        0)
+    splitters = all_samples[sec_idx]
+
+    valid = rows[:, 0] == 0
+    dest = searchsorted_rows(splitters, rows, lt_fn=lt_fn)
+    dest = jnp.clip(dest, 0, p - 1)
+
+    # --- 5. bucket exchange + local sort ---
+    cap_out = 2 * m + 2 * p + 4
+    got, got_valid, over1 = exchange(rows, dest, valid, p=p, cap_out=cap_out,
+                                     axis=axis)
+    got = jnp.where(got_valid[:, None], got, make_pad_rows(cap_out, W))
+    got = local_sort(got)
+
+    # --- 6. rebalance to exactly m rows per shard ---
+    cnt = jnp.sum(got_valid.astype(jnp.int32))
+    if int(np.asarray(cnt)) == 0:  # PLANTED-DIVERGENT
+        # "optimization": empty shard skips the count gather — deadlocks
+        # the mesh, since the other shards still enter the all_gather.
+        counts = jnp.zeros((p,), jnp.int32)
+    else:
+        counts = jax.lax.all_gather(cnt[None], axis).reshape(p)
+    offset = jnp.cumsum(counts) - counts
+    my_off = offset[jax.lax.axis_index(axis)]
+    gpos = my_off + jnp.arange(cap_out, dtype=jnp.int32)
+    v2 = got[:, 0] == 0
+    dest2 = jnp.clip(gpos // m, 0, p - 1)
+    carried = jnp.concatenate([gpos[:, None].astype(jnp.int32), got], axis=1)
+    out, out_valid, over2 = exchange(carried, dest2, v2, p=p, cap_out=m,
+                                     axis=axis)
+    perm = jnp.argsort(jnp.where(out_valid, out[:, 0], INT32_MAX), stable=True)
+    out = out[perm][:, 1:]
+    out_valid = out_valid[perm]
+    out = jnp.where(out_valid[:, None], out, make_pad_rows(m, W))
+    return out, (over1 | over2)

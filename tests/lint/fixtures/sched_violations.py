@@ -1,0 +1,72 @@
+"""Planted SCHED001/SCHED003/SCHED004 violations (parsed by saca-lint only).
+
+Each planted line carries a ``PLANT:<RULE>`` marker comment so the tests can
+locate it without hard-coding line numbers. The clean functions at the
+bottom must produce NO findings — they pin the structural/teardown
+exemptions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gather_stage(x, axis):
+    return jax.lax.all_gather(x, axis)
+
+
+def host_divergence(x, axis):
+    if bool(np.asarray(x).any()):  # PLANT:SCHED001
+        y = gather_stage(x, axis)
+    else:
+        y = x
+    return y
+
+
+def early_return_divergence(x, axis):
+    if bool(np.asarray(x).any()):  # PLANT:SCHED001-early
+        return x
+    return jax.lax.all_gather(x, axis)
+
+
+def divergent_cond(x, axis):
+    return jax.lax.cond(  # PLANT:SCHED003
+        x.sum() > 0,
+        lambda v: jax.lax.all_gather(v, axis),
+        lambda v: v,
+        x)
+
+
+def host_loop_collective(x, axis, steps):
+    for _ in range(steps):  # PLANT:SCHED004-host
+        x = jax.lax.ppermute(x, axis, [(0, 1)])
+    return x
+
+
+def lax_loop_collective(x, axis):
+    def body(i, acc):
+        return acc + jax.lax.all_gather(acc, axis).sum()
+    return jax.lax.fori_loop(0, 4, body, x)  # PLANT:SCHED004-lax
+
+
+# ---- clean: must produce no findings -----------------------------------
+
+def structural_divergence_ok(x, axis, p):
+    # predicate is a host config scalar -> replica-uniform by construction
+    if p > 2:
+        x = jax.lax.all_gather(x, axis)
+    return x
+
+
+def teardown_ok(x, axis, over):
+    if bool(np.asarray(over).any()):
+        raise RuntimeError("overflow")  # raise-terminated branch is exempt
+    return jax.lax.all_gather(x, axis)
+
+
+def uniform_branches_ok(x, axis, flag_arr):
+    # divergent predicate but identical collective sequence on both arms
+    if bool(np.asarray(flag_arr).any()):
+        x = jax.lax.all_gather(x, axis)
+    else:
+        x = jax.lax.all_gather(x * 2, axis)
+    return x

@@ -1,0 +1,54 @@
+"""Planted THREAD001/THREAD002/THREAD003 violations (parsed by saca-lint only)."""
+import collections
+import threading
+
+
+class BadServer:
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._jobs = collections.deque()
+        self._running = False
+        self._total = 0
+        self._ema = None
+
+    def start(self):
+        self._running = True  # PLANT:THREAD001-flag
+        t = threading.Thread(target=self._worker, daemon=True)
+        t.start()
+
+    def submit(self, item):
+        with self._cond:
+            self._jobs.append(item)
+            self._cond.notify_all()
+        self._total += 1  # PLANT:THREAD001-counter
+        self._jobs.append(item)  # PLANT:THREAD003-deque
+
+    def _bad_wait(self):
+        with self._cond:
+            if not self._jobs:
+                self._cond.wait()  # PLANT:THREAD002-wait
+
+    def _notify_unlocked(self):
+        self._cond.notify_all()  # PLANT:THREAD002-notify
+
+    def _worker(self):
+        while self._running:
+            with self._cond:
+                while not self._jobs:
+                    self._cond.wait()  # clean: wait under retest loop
+                item = self._jobs.popleft()  # clean: mutation under lock
+                self._total -= 1  # clean: write under lock
+            self._ema = item  # PLANT:THREAD001-ema
+
+    def stats(self):
+        return self._total, self._ema
+
+
+class NoLockNoFindings:
+    """Classes that own no lock are out of scope for the THREAD rules."""
+
+    def __init__(self):
+        self.x = 0
+
+    def bump(self):
+        self.x += 1

@@ -1,0 +1,56 @@
+"""Planted TRACE001/TRACE002/TRACE003 violations (parsed by saca-lint only)."""
+import collections
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+COUNTS = collections.Counter()
+CACHE = {}
+
+
+@jax.jit
+def closes_over_mutable(x):
+    COUNTS["hits"] += 1  # PLANT:TRACE001-counter
+    CACHE["last"] = 1  # PLANT:TRACE001-cache
+    return x + 1
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def host_sync(x, n):
+    y = jnp.cumsum(x)
+    s = float(y[-1])  # PLANT:TRACE002-float
+    z = np.asarray(y)  # PLANT:TRACE002-asarray
+    t = y.sum().item()  # PLANT:TRACE002-item
+    return x * n + s + t + z.shape[0]
+
+
+@jax.jit
+def scalar_steers(x, steps):
+    acc = x
+    for _ in range(steps):  # PLANT:TRACE003-range
+        acc = acc + 1
+    if steps > 3:  # PLANT:TRACE003-if
+        acc = acc * 2
+    b = steps.bit_length()  # PLANT:TRACE003-bitlength
+    return acc + b
+
+
+# ---- clean: must produce no findings -----------------------------------
+
+@jax.jit
+def shape_control_ok(x):
+    n = x.shape[0]  # .shape is static metadata, not a traced value
+    w = np.zeros(n)
+    s = float(w.sum())  # sync on a host numpy value is fine
+    for _ in range(n):
+        x = x + s
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def static_arg_ok(x, steps):
+    for _ in range(steps):  # steps is a declared static arg
+        x = x * 2
+    return x

@@ -1,0 +1,221 @@
+"""saca-lint tests: planted violations per rule, pragma semantics, the
+empty-baseline invariant on the real tree, and the CLI contract.
+
+Every planted line in tests/lint/fixtures/*.py carries a ``PLANT:<tag>``
+(or ``PLANTED-DIVERGENT``) marker comment; tests locate lines by marker so
+editing a fixture cannot silently rot the expected line numbers.
+"""
+import ast
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from tools import saca_lint
+from tools.saca_lint import collectives
+from tools.saca_lint.__main__ import main as lint_main
+from tools.saca_lint.astutil import Module
+
+REPO = Path(__file__).resolve().parents[2]
+FIXTURES = Path(__file__).resolve().parent / "fixtures"
+BSP = REPO / "src" / "repro" / "bsp"
+
+
+def plant_lines(path: Path, needle: str = "PLANT") -> dict[str, int]:
+    """marker tag -> 1-based line number."""
+    out = {}
+    for i, text in enumerate(path.read_text().splitlines(), start=1):
+        if needle in text:
+            tag = text.split(needle + ":", 1)[1].split()[0] \
+                if needle + ":" in text else needle
+            out[tag] = i
+    return out
+
+
+def found(report, fixture: Path) -> set[tuple[str, int]]:
+    rel = fixture.resolve().relative_to(REPO).as_posix()
+    return {(f.rule_id, f.line) for f in report.active if f.path == rel}
+
+
+# ---------------------------------------------------------------------------
+# the real tree: empty baseline, no active findings, justified suppressions
+# ---------------------------------------------------------------------------
+
+def test_real_tree_is_clean():
+    report = saca_lint.run()
+    assert report.active == [], \
+        "unexpected findings:\n" + "\n".join(f.render() for f in report.active)
+    assert report.stale_pragmas == []
+    assert report.baselined == []
+    for f in report.suppressed:
+        assert f.justification, f.render()
+
+
+def test_baseline_file_is_empty():
+    keys = [ln for ln in saca_lint.DEFAULT_BASELINE.read_text().splitlines()
+            if ln.strip() and not ln.startswith("#")]
+    assert keys == []
+
+
+# ---------------------------------------------------------------------------
+# planted regression: divergent collective in a copy of psort_shard_body
+# ---------------------------------------------------------------------------
+
+def test_planted_psort_divergence_caught_at_line():
+    fixture = FIXTURES / "psort_divergent.py"
+    line = plant_lines(fixture, "PLANTED-DIVERGENT")["PLANTED-DIVERGENT"]
+    report = saca_lint.run([fixture, BSP])
+    assert found(report, fixture) == {("SCHED001", line)}
+    # the un-planted bsp package stays clean in the same run
+    assert all("psort_divergent" in f.path for f in report.active)
+
+
+# ---------------------------------------------------------------------------
+# one planted violation per rule
+# ---------------------------------------------------------------------------
+
+def test_sched_rules():
+    fixture = FIXTURES / "sched_violations.py"
+    at = plant_lines(fixture)
+    report = saca_lint.run([fixture])
+    assert found(report, fixture) == {
+        ("SCHED001", at["SCHED001"]),
+        ("SCHED001", at["SCHED001-early"]),
+        ("SCHED003", at["SCHED003"]),
+        ("SCHED004", at["SCHED004-host"]),
+        ("SCHED004", at["SCHED004-lax"]),
+    }
+
+
+def test_trace_rules():
+    fixture = FIXTURES / "trace_violations.py"
+    at = plant_lines(fixture)
+    report = saca_lint.run([fixture])
+    assert found(report, fixture) == {
+        ("TRACE001", at["TRACE001-counter"]),
+        ("TRACE001", at["TRACE001-cache"]),
+        ("TRACE002", at["TRACE002-float"]),
+        ("TRACE002", at["TRACE002-asarray"]),
+        ("TRACE002", at["TRACE002-item"]),
+        ("TRACE003", at["TRACE003-range"]),
+        ("TRACE003", at["TRACE003-if"]),
+        ("TRACE003", at["TRACE003-bitlength"]),
+    }
+
+
+def test_thread_rules():
+    fixture = FIXTURES / "thread_violations.py"
+    at = plant_lines(fixture)
+    report = saca_lint.run([fixture])
+    assert found(report, fixture) == {
+        ("THREAD001", at["THREAD001-flag"]),
+        ("THREAD001", at["THREAD001-counter"]),
+        ("THREAD001", at["THREAD001-ema"]),
+        ("THREAD002", at["THREAD002-wait"]),
+        ("THREAD002", at["THREAD002-notify"]),
+        ("THREAD003", at["THREAD003-deque"]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# pragma semantics: justified suppresses, unjustified doesn't, stale flagged
+# ---------------------------------------------------------------------------
+
+def test_pragma_semantics():
+    fixture = FIXTURES / "pragma_cases.py"
+    report = saca_lint.run([fixture])
+
+    sup = {f.justification for f in report.suppressed}
+    assert len(report.suppressed) == 2
+    assert any("deliberate trace counter" in j for j in sup)
+    assert any("pragma on the line above" in j for j in sup)
+
+    assert len(report.active) == 1
+    assert report.active[0].rule_id == "TRACE001"
+    assert "missing justification" in report.active[0].message
+
+    assert len(report.stale_pragmas) == 1
+    assert report.stale_pragmas[0].rules == ("THREAD001",)
+
+
+# ---------------------------------------------------------------------------
+# SCHED002: drift between source and the pinned counter contract
+# ---------------------------------------------------------------------------
+
+def test_sched002_drift_detected(tmp_path):
+    src = textwrap.dedent("""\
+        import jax
+
+        def _sm1_body(x, axis):
+            return jax.lax.ppermute(x, axis, [(0, 1)])
+
+        def _sm2_body(x, axis):
+            return jax.lax.all_gather(x, axis)
+    """)
+    mod = Module(path=tmp_path / "suffix_array.py",
+                 name="repro.bsp.suffix_array",
+                 tree=ast.parse(src), source=src)
+    findings, _ex = collectives.analyze({mod.name: mod})
+    drift = [f for f in findings if f.rule_id == "SCHED002"]
+    assert drift, "schedule drift must be reported"
+    msgs = " | ".join(f.message for f in drift)
+    assert "counter contract" in msgs
+    assert "pinned 11/9" in msgs
+
+
+def test_static_schedule_matches_contract():
+    report = saca_lint.run([BSP])
+    assert report.active == [], \
+        "\n".join(f.render() for f in report.active)
+    ex = report.extractor
+    expected = {
+        "exchange": ["all_to_all"] * 2,
+        "psort": ["all_gather", "all_to_all", "all_to_all",
+                  "all_gather", "all_to_all", "all_to_all"],
+        "SM1": [collectives.LABEL_KINDS[s] for s in collectives.SM1_LABELS],
+        "SM2": [collectives.LABEL_KINDS[s] for s in collectives.SM2_LABELS],
+    }
+    for stage, want in expected.items():
+        seq = ex.stage_schedule(stage)
+        assert seq is not None, stage
+        assert [e.kind for e in seq] == want, stage
+    assert len(ex.stage_schedule("SM1")) == 11
+    assert len(ex.stage_schedule("SM2")) == 9
+
+
+# ---------------------------------------------------------------------------
+# CLI contract
+# ---------------------------------------------------------------------------
+
+def test_cli_check_exits_zero_on_real_tree():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.saca_lint", "--check"],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 failure(s)" in proc.stdout
+
+
+def test_cli_strict_exits_zero_on_real_tree(capsys):
+    assert lint_main(["--strict"]) == 0
+    out = capsys.readouterr().out
+    assert "suppressed" in out
+
+
+def test_cli_exits_one_on_fixture(capsys):
+    rc = lint_main([str(FIXTURES / "trace_violations.py")])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "TRACE002" in out
+
+
+def test_cli_list_rules(capsys):
+    assert lint_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule_id in saca_lint.RULES:
+        assert rule_id in out
+
+
+def test_cli_schedule_dump(capsys):
+    assert lint_main(["--schedule"]) == 0
+    out = capsys.readouterr().out
+    assert "[11]" in out and "[ 9]" in out

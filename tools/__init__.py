@@ -1,0 +1,1 @@
+"""Repo tooling (`tools.check_docs`, `tools.saca_lint`)."""

@@ -114,6 +114,20 @@ def check_file(path: Path) -> list[str]:
     return errors
 
 
+def check_rule_catalogue() -> list[str]:
+    """Every shipped saca-lint rule ID must appear in the rule catalogue
+    (docs/static_analysis.md) — a rule without documentation is a finding
+    nobody can act on."""
+    catalogue = REPO / "docs" / "static_analysis.md"
+    if not catalogue.exists():
+        return ["docs/static_analysis.md: missing (saca-lint rule catalogue)"]
+    text = catalogue.read_text()
+    from tools.saca_lint import RULES
+    return [f"docs/static_analysis.md: shipped rule {rid} "
+            f"({info.name}) is not documented in the catalogue"
+            for rid, info in sorted(RULES.items()) if rid not in text]
+
+
 def main(argv=None) -> int:
     args = (argv if argv is not None else sys.argv[1:])
     files = ([Path(a) for a in args] if args else
@@ -126,6 +140,9 @@ def main(argv=None) -> int:
         status = "FAIL" if errs else "ok"
         print(f"[{status}] {f.relative_to(REPO)} ({blocks} python blocks)")
         all_errors += errs
+    rule_errs = check_rule_catalogue()
+    print(f"[{'FAIL' if rule_errs else 'ok'}] saca-lint rule catalogue")
+    all_errors += rule_errs
     for e in all_errors:
         print(e, file=sys.stderr)
     return 1 if all_errors else 0

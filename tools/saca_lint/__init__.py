@@ -1,0 +1,80 @@
+"""saca-lint — static analysis for the BSP/JAX/serve layers.
+
+Three rule families over `src/repro/`:
+
+* **SCHED** (`collectives.py`) — static collective-schedule extraction
+  over the BSP stages, divergence detection across host and traced
+  branches, and a drift check pinning source ⇔ `BSPCounters` contract
+  ⇔ `estimate_costs` replay together.
+* **TRACE** (`tracing.py`) — JAX trace hygiene in jitted regions:
+  mutable-global closure, host syncs on traced values, traced params
+  steering host control flow.
+* **THREAD** (`threading_rules.py`) — serve-tier thread safety:
+  cross-thread writes outside the lock, condition discipline,
+  container mutation outside the lock.
+
+Usage: ``python -m tools.saca_lint --check`` (see `__main__.py`).
+Suppressions: ``# saca-lint: allow[RULE] <justification>`` — the
+justification text is mandatory. Baseline: `tools/saca_lint/baseline.txt`
+(kept empty; `--strict` fails if it is not).
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+
+from . import collectives, threading_rules, tracing  # register rules
+from .astutil import REPO, Module, load_modules
+from .framework import (DEFAULT_BASELINE, LINT001, RULES, Finding, Pragma,
+                        apply_pragmas, load_baseline, scan_pragmas,
+                        write_baseline)
+
+DEFAULT_PATHS = (REPO / "src" / "repro",)
+
+
+@dataclasses.dataclass
+class Report:
+    findings: list[Finding]
+    stale_pragmas: list[Pragma]
+    extractor: "collectives.ScheduleExtractor"
+    modules: dict[str, Module]
+
+    @property
+    def active(self) -> list[Finding]:
+        return [f for f in self.findings
+                if not f.suppressed and not f.baselined]
+
+    @property
+    def suppressed(self) -> list[Finding]:
+        return [f for f in self.findings if f.suppressed]
+
+    @property
+    def baselined(self) -> list[Finding]:
+        return [f for f in self.findings if f.baselined]
+
+
+def run(paths=None, baseline_path: Path | None = None) -> Report:
+    """Lint `paths` (files or directories; default src/repro)."""
+    paths = [Path(p) for p in (paths or DEFAULT_PATHS)]
+    modules = load_modules(paths)
+    sched, extractor = collectives.analyze(modules)
+    findings = list(sched)
+    findings += tracing.analyze(modules, extractor.shard_map_bodies)
+    findings += threading_rules.analyze(modules)
+
+    pragmas: list[Pragma] = []
+    for mod in modules.values():
+        pragmas += scan_pragmas(mod)
+    stale, _unjustified = apply_pragmas(findings, pragmas)
+
+    baseline = load_baseline(baseline_path or DEFAULT_BASELINE)
+    for f in findings:
+        if not f.suppressed and f.key in baseline:
+            f.baselined = True
+    findings.sort(key=lambda f: (f.path, f.line, f.rule_id))
+    return Report(findings=findings, stale_pragmas=stale,
+                  extractor=extractor, modules=modules)
+
+
+__all__ = ["run", "Report", "Finding", "RULES", "LINT001",
+           "DEFAULT_BASELINE", "DEFAULT_PATHS", "write_baseline"]

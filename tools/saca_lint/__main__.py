@@ -1,0 +1,93 @@
+"""CLI: ``python -m tools.saca_lint [--check|--strict|...] [paths...]``.
+
+Exit codes: 0 clean, 1 findings (or strict-mode hygiene failures),
+2 usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import DEFAULT_BASELINE, DEFAULT_PATHS, RULES, run, write_baseline
+from .collectives import STAGES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.saca_lint",
+        description="Static analysis for the BSP/JAX/serve layers "
+                    "(SCHED/TRACE/THREAD rule families).")
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories to lint (default: src/repro)")
+    ap.add_argument("--check", action="store_true",
+                    help="report non-baselined findings; exit 1 if any "
+                         "(this is also the default action)")
+    ap.add_argument("--strict", action="store_true",
+                    help="nightly mode: additionally fail on stale pragmas, "
+                         "any non-empty baseline, and list every "
+                         "suppression for audit")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="baseline file (default: tools/saca_lint/"
+                         "baseline.txt)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="write the current active findings into the "
+                         "baseline file and exit 0")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    ap.add_argument("--schedule", action="store_true",
+                    help="print the statically extracted per-stage "
+                         "collective schedules and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in sorted(RULES.values(), key=lambda r: r.rule_id):
+            print(f"{r.rule_id}  {r.name}\n    {r.summary}")
+        return 0
+
+    report = run(args.paths or None, baseline_path=args.baseline)
+
+    if args.schedule:
+        for stage in STAGES:
+            seq = report.extractor.stage_schedule(stage)
+            if seq is None:
+                print(f"{stage:9s} <stage module not in lint paths>")
+            else:
+                print(f"{stage:9s} [{len(seq):2d}] "
+                      + " ".join(e.kind for e in seq))
+        return 0
+
+    if args.update_baseline:
+        write_baseline(args.baseline, report.active)
+        print(f"baseline: wrote {len(report.active)} finding(s) to "
+              f"{args.baseline}")
+        return 0
+
+    failures = 0
+    for f in report.active:
+        print(f.render())
+        failures += 1
+    if args.strict:
+        for f in report.suppressed:
+            print(f.render())
+        for p in report.stale_pragmas:
+            print(f"{p.path}:{p.pragma_line}: LINT001 stale pragma "
+                  f"allow[{','.join(p.rules)}] — no finding matches it")
+            failures += 1
+        for f in report.baselined:
+            print(f.render())
+            failures += 1
+    else:
+        for p in report.stale_pragmas:
+            print(f"{p.path}:{p.pragma_line}: warning: stale pragma "
+                  f"allow[{','.join(p.rules)}] (LINT001; fails --strict)")
+
+    n_sup = len(report.suppressed)
+    n_base = len(report.baselined)
+    print(f"saca-lint: {failures} failure(s), {n_sup} suppressed, "
+          f"{n_base} baselined, {len(report.modules)} module(s) analyzed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

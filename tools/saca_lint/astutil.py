@@ -1,0 +1,160 @@
+"""Shared AST machinery for saca-lint: module loading, name resolution.
+
+Every rule family works on the same picture of the code: a registry of
+parsed modules (keyed by dotted module name, derived from the repo
+layout), a per-module symbol table (imports + top-level defs), and a
+function index that also covers *nested* functions (``rec`` inside
+`suffix_array_bsp`, ``fn`` inside `run_psort`) via dotted qualnames.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+
+
+@dataclasses.dataclass
+class Module:
+    path: Path                       # absolute
+    name: str                        # dotted module name (best effort)
+    tree: ast.Module
+    source: str
+
+    @property
+    def rel(self) -> str:
+        """Repo-relative posix path (finding attribution)."""
+        try:
+            return self.path.relative_to(REPO).as_posix()
+        except ValueError:
+            return self.path.as_posix()
+
+
+def module_name_for(path: Path) -> str:
+    """Dotted module name from the repo layout (src/ is the import root)."""
+    path = path.resolve()
+    for root in (REPO / "src", REPO):
+        try:
+            rel = path.relative_to(root)
+        except ValueError:
+            continue
+        parts = list(rel.with_suffix("").parts)
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+    return path.stem
+
+
+def load_modules(paths) -> dict[str, Module]:
+    """Parse every .py file under `paths` (files or directories)."""
+    files: list[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            files.append(p)
+    out: dict[str, Module] = {}
+    for f in files:
+        src = f.read_text()
+        mod = Module(path=f.resolve(), name=module_name_for(f),
+                     tree=ast.parse(src, filename=str(f)), source=src)
+        out[mod.name] = mod
+    return out
+
+
+@dataclasses.dataclass
+class SymbolTable:
+    """Per-module import aliases and top-level function defs."""
+
+    #: local name -> (source module dotted name, attr) for `from X import Y`
+    from_imports: dict[str, tuple[str, str]]
+    #: local alias -> module dotted name for `import X [as Y]`
+    mod_imports: dict[str, str]
+    #: top-level function/class defs by name
+    defs: dict[str, ast.AST]
+
+
+def symbols(mod: Module) -> SymbolTable:
+    from_imports: dict[str, tuple[str, str]] = {}
+    mod_imports: dict[str, str] = {}
+    defs: dict[str, ast.AST] = {}
+    pkg_parts = mod.name.split(".")[:-1]
+    for node in mod.tree.body:
+        if isinstance(node, ast.ImportFrom):
+            if node.level:  # relative import -> absolute, repo layout
+                base = pkg_parts[: len(pkg_parts) - node.level + 1]
+                src = ".".join(base + ([node.module] if node.module else []))
+            else:
+                src = node.module or ""
+            for a in node.names:
+                from_imports[a.asname or a.name] = (src, a.name)
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                mod_imports[a.asname or a.name] = a.name
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)):
+            defs[node.name] = node
+    return SymbolTable(from_imports, mod_imports, defs)
+
+
+def iter_functions(mod: Module):
+    """Yield (qualname, FunctionDef) for every function, nested included.
+
+    Methods get ``Class.method`` qualnames; closures ``outer.inner``.
+    """
+    def walk(body, prefix):
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}{node.name}"
+                yield q, node
+                yield from walk(node.body, q + ".")
+            elif isinstance(node, ast.ClassDef):
+                yield from walk(node.body, f"{prefix}{node.name}.")
+            elif isinstance(node, (ast.If, ast.Try, ast.With, ast.For,
+                                   ast.While)):
+                for field in ("body", "orelse", "handlers", "finalbody"):
+                    sub = getattr(node, field, None) or []
+                    for h in sub:
+                        if isinstance(h, ast.excepthandler):
+                            yield from walk(h.body, prefix)
+                    if sub and not isinstance(sub[0], ast.excepthandler):
+                        yield from walk(sub, prefix)
+
+    yield from walk(mod.tree.body, "")
+
+
+def attr_chain(node: ast.AST) -> list[str] | None:
+    """`jax.lax.all_to_all` -> ["jax", "lax", "all_to_all"]; None if not a
+    pure Name/Attribute chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return None
+
+
+def is_self_attr(node: ast.AST, attr: str | None = None) -> str | None:
+    """Return the attribute name if `node` is ``self.X`` (optionally == attr)."""
+    if (isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        if attr is None or node.attr == attr:
+            return node.attr
+    return None
+
+
+def const_str_tuple(node: ast.AST) -> tuple[str, ...]:
+    """Constant str or tuple/list of constant strs -> tuple of strings."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.append(e.value)
+        return tuple(out)
+    return ()

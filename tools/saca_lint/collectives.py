@@ -1,0 +1,585 @@
+"""SCHED rules: static collective-schedule extraction over the BSP layer.
+
+The extractor reconstructs, per function, the *sequence of collective
+kinds* issued along control-flow paths — interprocedurally, through the
+repo's actual composition idioms:
+
+* direct ``jax.lax.<collective>(...)`` calls,
+* calls to functions defined in any analyzed module (``exchange`` from
+  `repro.bsp.exchange`, ``psort_shard_body`` from `repro.bsp.psort`),
+* ``functools.partial(f, ...)`` bindings and name aliases,
+* the jitted-wrapper idiom ``shard_map(body, mesh=...)(args)``,
+* ``lax.cond`` / ``lax.switch`` branch callables and the lax loop
+  combinators (`fori_loop`, `while_loop`, `scan`).
+
+On a real mesh every rank must issue the *same* collective sequence; a
+host conditional whose branches diverge deadlocks unless its predicate
+is provably replica-uniform. We treat a predicate as uniform only when
+it is *structural* — built from plain names, constants, arithmetic,
+comparisons, `len`/`max`/`min`/`math.*` and `.shape`-style attributes —
+i.e. a function of static geometry, never of device data. Branches that
+terminate in `raise` are error teardown and exempt.
+
+Unknown callables (imported from un-analyzed modules, or passed in as
+parameters like `psort_shard_body`'s ``lt_fn``/``local_sort``) are
+assumed collective-free; that is the documented soundness boundary.
+
+SCHED002 pins the extracted schedule against the repo's dynamic
+accounting: the per-stage sequences must match the SM1=11 / SM2=9
+contract of `repro.bsp.counters`, and the label stream that
+`estimate_costs(n, p)` replays must map, label by label, onto the
+statically extracted kinds. Model, counters and source cannot drift
+apart without a lint failure.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from .astutil import Module, SymbolTable, attr_chain, iter_functions, symbols
+from .framework import Finding, rule
+
+SCHED001 = rule(
+    "SCHED001", "divergent-collectives-host-branch",
+    "host `if` whose branches issue different collective sequences from a "
+    "predicate that is not provably replica-uniform (real-mesh deadlock)")
+SCHED002 = rule(
+    "SCHED002", "schedule-model-drift",
+    "statically extracted collective schedule disagrees with the "
+    "BSPCounters contract (SM1=11/SM2=9) or with estimate_costs' replay")
+SCHED003 = rule(
+    "SCHED003", "divergent-collectives-traced-branch",
+    "`lax.cond`/`lax.switch` branches issue different collective sequences "
+    "(predicate is traced, i.e. data-dependent by construction)")
+SCHED004 = rule(
+    "SCHED004", "collective-inside-loop",
+    "collective issued inside a loop whose trip count is not part of the "
+    "static schedule (superstep count becomes data/shape dependent)")
+
+#: lax collective name -> canonical kind
+COLLECTIVES = {
+    "all_to_all": "all_to_all", "ragged_all_to_all": "all_to_all",
+    "all_gather": "all_gather",
+    "ppermute": "ppermute", "pshuffle": "ppermute",
+    "psum": "psum", "psum_scatter": "psum",
+    "pmax": "pmax", "pmin": "pmin", "pmean": "pmean",
+}
+
+RECURSION = "<recursion>"
+
+#: BSP stage bodies whose schedules are contract-pinned (SCHED002).
+STAGES = {
+    "exchange": ("repro.bsp.exchange", "exchange"),
+    "psort": ("repro.bsp.psort", "psort_shard_body"),
+    "SM1": ("repro.bsp.suffix_array", "_sm1_body"),
+    "SM2": ("repro.bsp.suffix_array", "_sm2_body"),
+}
+
+#: counter label (stage prefix stripped) -> collective kind, straight from
+#: `_round_cost`. This is the bridge between dynamic accounting and the AST.
+LABEL_KINDS = {
+    "halo": "ppermute",
+    "psort/sample_gather": "all_gather",
+    "psort/a2a_hop1": "all_to_all",
+    "psort/a2a_hop2": "all_to_all",
+    "psort/count_gather": "all_gather",
+    "psort/rebal_hop1": "all_to_all",
+    "psort/rebal_hop2": "all_to_all",
+    "rank/boundary": "ppermute",
+    "rank/scan": "all_gather",
+    "route/a2a_hop1": "all_to_all",
+    "route/a2a_hop2": "all_to_all",
+    "unroute/a2a_hop1": "all_to_all",
+    "unroute/a2a_hop2": "all_to_all",
+}
+
+SM1_LABELS = ["halo", "psort/sample_gather", "psort/a2a_hop1",
+              "psort/a2a_hop2", "psort/count_gather", "psort/rebal_hop1",
+              "psort/rebal_hop2", "rank/boundary", "rank/scan",
+              "route/a2a_hop1", "route/a2a_hop2"]
+SM2_LABELS = ["unroute/a2a_hop1", "unroute/a2a_hop2", "halo",
+              "psort/sample_gather", "psort/a2a_hop1", "psort/a2a_hop2",
+              "psort/count_gather", "psort/rebal_hop1", "psort/rebal_hop2"]
+
+#: The SCHED rules encode *BSP superstep* discipline: every rank must issue
+#: one fixed collective sequence per round. The transformer stack
+#: (models/, launch/, train/) runs its collectives under pjit/scan where
+#: per-layer repetition and config-gated MoE dispatch are SPMD-uniform by
+#: construction — a different (compiler-checked) regime, so it is out of
+#: scope by module prefix rather than drowned in pragmas.
+SCHED_EXEMPT_PREFIXES = ("repro.models", "repro.launch", "repro.train")
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    kind: str
+    path: str
+    line: int
+
+
+def kinds(seq: list[Event]) -> tuple[str, ...]:
+    return tuple(e.kind for e in seq)
+
+
+_STRUCTURAL_CALLS = {"len", "max", "min", "int", "abs", "bool", "float",
+                     "round", "isinstance", "str"}
+_STRUCTURAL_ATTRS = {"shape", "ndim", "size", "dtype", "axis_names"}
+
+
+def is_structural(node: ast.AST) -> bool:
+    """True if the predicate is a function of static geometry only."""
+    if isinstance(node, (ast.Name, ast.Constant)):
+        return True
+    if isinstance(node, (ast.BoolOp, ast.BinOp, ast.UnaryOp, ast.Compare,
+                         ast.IfExp, ast.Tuple, ast.Subscript)):
+        return all(is_structural(c) for c in ast.iter_child_nodes(node)
+                   if not isinstance(c, (ast.operator, ast.cmpop,
+                                         ast.unaryop, ast.boolop,
+                                         ast.expr_context)))
+    if isinstance(node, ast.Attribute):
+        chain = attr_chain(node)
+        if chain and chain[0] == "math":
+            return True
+        return node.attr in _STRUCTURAL_ATTRS and is_structural(node.value)
+    if isinstance(node, ast.Call):
+        chain = attr_chain(node.func)
+        ok = (isinstance(node.func, ast.Name)
+              and node.func.id in _STRUCTURAL_CALLS) \
+            or (chain is not None and chain[0] == "math")
+        return ok and all(is_structural(a) for a in node.args)
+    return False
+
+
+def _terminates(body: list[ast.stmt]) -> bool:
+    """Branch is error teardown / early exit via raise."""
+    return any(isinstance(s, ast.Raise) for s in body)
+
+
+class ScheduleExtractor:
+    """Interprocedural collective-sequence summaries over a module set."""
+
+    def __init__(self, modules: dict[str, Module]):
+        self.modules = modules
+        self.syms: dict[str, SymbolTable] = {
+            name: symbols(m) for name, m in modules.items()}
+        self.funcs: dict[str, dict[str, ast.FunctionDef]] = {
+            name: dict(iter_functions(m)) for name, m in modules.items()}
+        self._memo: dict[tuple[str, str], list[Event]] = {}
+        self._busy: set[tuple[str, str]] = set()
+        self.findings: list[Finding] = []
+        #: (module, qualname) of every callable handed to shard_map —
+        #: shared with the TRACE rules (these run under tracing).
+        self.shard_map_bodies: set[tuple[str, str]] = set()
+
+    def emit(self, modname: str, finding: Finding) -> None:
+        if not modname.startswith(SCHED_EXEMPT_PREFIXES):
+            self.findings.append(finding)
+
+    # -- public ------------------------------------------------------------
+    def summarize(self, modname: str, qualname: str) -> list[Event]:
+        key = (modname, qualname)
+        if key in self._memo:
+            return self._memo[key]
+        if key in self._busy:
+            node = self.funcs[modname][qualname]
+            return [Event(RECURSION, self.modules[modname].rel, node.lineno)]
+        self._busy.add(key)
+        try:
+            node = self.funcs[modname][qualname]
+            walker = _FuncWalker(self, self.modules[modname], qualname)
+            events = walker.stmts(node.body)
+        finally:
+            self._busy.discard(key)
+        self._memo[key] = events
+        return events
+
+    def run(self) -> list[Finding]:
+        for modname, funcs in self.funcs.items():
+            for qualname in funcs:
+                self.summarize(modname, qualname)
+        self._crosscheck()
+        return self.findings
+
+    def stage_schedule(self, stage: str) -> list[Event] | None:
+        modname, qual = STAGES[stage]
+        if modname in self.funcs and qual in self.funcs.get(modname, {}):
+            return self.summarize(modname, qual)
+        return None
+
+    # -- SCHED002 ----------------------------------------------------------
+    def _crosscheck(self) -> None:
+        sm1 = self.stage_schedule("SM1")
+        sm2 = self.stage_schedule("SM2")
+        if sm1 is None or sm2 is None:
+            return  # not analyzing the real bsp package
+        mod = self.modules[STAGES["SM1"][0]]
+
+        def drift(stage, msg):
+            node = self.funcs[STAGES[stage][0]][STAGES[stage][1]]
+            self.findings.append(Finding(
+                SCHED002, self.modules[STAGES[stage][0]].rel, node.lineno,
+                f"[{stage}] {msg}"))
+
+        expected = {"SM1": [LABEL_KINDS[s] for s in SM1_LABELS],
+                    "SM2": [LABEL_KINDS[s] for s in SM2_LABELS]}
+        for stage, seq in (("SM1", sm1), ("SM2", sm2)):
+            got = list(kinds(seq))
+            if got != expected[stage]:
+                drift(stage,
+                      f"static schedule {got} != counter contract "
+                      f"{expected[stage]}")
+        if len(sm1) != 11 or len(sm2) != 9:
+            drift("SM1", f"SM1/SM2 superstep counts {len(sm1)}/{len(sm2)} "
+                         f"!= pinned 11/9 (repro.bsp.counters contract)")
+        exch = self.stage_schedule("exchange")
+        if exch is not None and list(kinds(exch)) != ["all_to_all"] * 2:
+            drift("SM1", f"exchange schedule {list(kinds(exch))} != two "
+                         f"all_to_all hops")
+        ps = self.stage_schedule("psort")
+        if ps is not None and list(kinds(ps)) != [
+                "all_gather", "all_to_all", "all_to_all",
+                "all_gather", "all_to_all", "all_to_all"]:
+            drift("SM1", f"psort_shard_body schedule {list(kinds(ps))} != "
+                         f"the 6-collective Algorithm-2 contract")
+        self._replay_check(drift, expected)
+
+    def _replay_check(self, drift, expected) -> None:
+        """Run estimate_costs' analytic replay; its label stream must map,
+        label for label, onto the statically extracted kinds."""
+        real = self.modules.get("repro.bsp.suffix_array")
+        if real is None or "src/repro/bsp" not in real.rel:
+            return
+        import sys
+        from .astutil import REPO
+        src = str(REPO / "src")
+        if src not in sys.path:
+            sys.path.insert(0, src)
+        try:
+            from repro.bsp.suffix_array import estimate_costs
+        except Exception as e:  # import env without jax etc.
+            drift("SM1", f"could not import estimate_costs for replay: {e}")
+            return
+        ct = estimate_costs(3000, 8, base_threshold=64)
+        labels = [e["label"] for e in ct.log]
+        i, rounds = 0, 0
+        while i < len(labels):
+            lab = labels[i]
+            if lab.startswith("SM1/") or lab.startswith("SM2/"):
+                stage = lab[:3]
+                want = SM1_LABELS if stage == "SM1" else SM2_LABELS
+                chunk = labels[i:i + len(want)]
+                suffixes = [c.split("/", 1)[1] if "/" in c else c
+                            for c in chunk]
+                if suffixes != want:
+                    drift(stage, f"estimate_costs label run {chunk} != "
+                                 f"static schedule labels {want}")
+                    return
+                if [LABEL_KINDS[s] for s in suffixes] != expected[stage]:
+                    drift(stage, "estimate_costs labels map to kinds that "
+                                 "differ from the static schedule")
+                    return
+                rounds += stage == "SM1"
+                i += len(want)
+            elif lab == "base/gather":
+                i += 1
+            else:
+                drift("SM1", f"unknown counter label {lab!r} in replay")
+                return
+        if ct.supersteps != 20 * ct.rounds + 1 or ct.rounds != rounds:
+            drift("SM1", f"replay S={ct.supersteps} rounds={ct.rounds} "
+                         f"violates S = 20*rounds + 1")
+
+
+class _FuncWalker:
+    """Walks one function body, producing its collective event sequence."""
+
+    def __init__(self, ex: ScheduleExtractor, mod: Module, qualname: str):
+        self.ex = ex
+        self.mod = mod
+        self.qualname = qualname
+        self.bindings: dict[str, tuple] = {}
+
+    # -- resolution --------------------------------------------------------
+    def resolve(self, node: ast.AST):
+        """Resolve a callable expression to ("fn", mod, qual) /
+        ("lambda", node) / None."""
+        if isinstance(node, ast.Lambda):
+            return ("lambda", node)
+        if isinstance(node, ast.Name):
+            if node.id in self.bindings:
+                return self.bindings[node.id]
+            # lexical scopes: innermost enclosing qualname prefix first
+            parts = self.qualname.split(".")
+            for depth in range(len(parts), -1, -1):
+                cand = ".".join(parts[:depth] + [node.id])
+                if cand in self.ex.funcs[self.mod.name]:
+                    return ("fn", self.mod.name, cand)
+            sym = self.ex.syms[self.mod.name]
+            if node.id in sym.from_imports:
+                m, a = sym.from_imports[node.id]
+                if m in self.ex.funcs and a in self.ex.funcs[m]:
+                    return ("fn", m, a)
+            return None
+        if isinstance(node, ast.Attribute):
+            chain = attr_chain(node)
+            if chain and len(chain) == 2:
+                sym = self.ex.syms[self.mod.name]
+                m = sym.mod_imports.get(chain[0])
+                if m in self.ex.funcs and chain[1] in self.ex.funcs[m]:
+                    return ("fn", m, chain[1])
+            return None
+        if isinstance(node, ast.Call):
+            chain = attr_chain(node.func) or []
+            term = chain[-1] if chain else None
+            if term in ("partial", "jit", "shard_map") and node.args:
+                t = self.resolve(node.args[0])
+                if term == "shard_map" and t and t[0] == "fn":
+                    self.ex.shard_map_bodies.add((t[1], t[2]))
+                return t
+        return None
+
+    def summary_of(self, target, line: int) -> list[Event]:
+        if target is None:
+            return []
+        if target[0] == "lambda":
+            return self.expr(target[1].body)
+        return self.ex.summarize(target[1], target[2])
+
+    # -- expressions -------------------------------------------------------
+    def expr(self, node: ast.AST | None) -> list[Event]:
+        if node is None or isinstance(node, (ast.Constant, ast.Name)):
+            return []
+        if isinstance(node, ast.Call):
+            return self.call(node)
+        if isinstance(node, ast.Lambda):
+            return []          # deferred until called
+        ev: list[Event] = []
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, ast.expr):
+                ev += self.expr(child)
+            elif isinstance(child, ast.comprehension):
+                ev += self.expr(child.iter)
+        return ev
+
+    def _is_lax(self, node: ast.Call, chain: list[str] | None) -> bool:
+        if chain and len(chain) >= 2:
+            if "lax" in chain[:-1]:
+                return True
+        if isinstance(node.func, ast.Name):
+            sym = self.ex.syms[self.mod.name]
+            src = sym.from_imports.get(node.func.id, ("", ""))[0]
+            return src in ("jax.lax", "jax")
+        return False
+
+    def call(self, node: ast.Call) -> list[Event]:
+        chain = attr_chain(node.func)
+        term = chain[-1] if chain else (
+            node.func.id if isinstance(node.func, ast.Name) else None)
+        lax = self._is_lax(node, chain)
+
+        # lax control combinators: handle before generic arg visiting so
+        # branch/body callables are not double-counted.
+        if lax and term == "cond" and len(node.args) >= 3:
+            return self._cond(node)
+        if lax and term == "switch" and len(node.args) >= 2:
+            return self._switch(node)
+        if lax and term in ("fori_loop", "while_loop", "scan", "map",
+                            "associative_scan"):
+            return self._loop_combinator(node, term)
+
+        # events hidden in the callee expression itself: method chains like
+        # `jax.lax.all_gather(...).reshape(p)` put the collective inside
+        # node.func.value, and `shard_map(body, ...)(xg)` puts the traced
+        # body inside an inner Call.
+        ev: list[Event] = []
+        inner_target = None
+        if isinstance(node.func, ast.Attribute):
+            ev += self.expr(node.func.value)
+        elif isinstance(node.func, ast.Call):
+            inner_target = self.resolve(node.func)
+            if inner_target is not None:
+                ev += self.expr_call_args(node.func)
+            else:
+                ev += self.expr(node.func)
+        for a in node.args:
+            ev += self.expr(a)
+        for kw in node.keywords:
+            ev += self.expr(kw.value)
+
+        if lax and term in COLLECTIVES:
+            ev.append(Event(COLLECTIVES[term], self.mod.rel, node.lineno))
+            return ev
+        if inner_target is not None:
+            return ev + self.summary_of(inner_target, node.lineno)
+        target = self.resolve(node.func)
+        if target is not None:
+            ev += self.summary_of(target, node.lineno)
+        return ev
+
+    def expr_call_args(self, call: ast.Call) -> list[Event]:
+        ev: list[Event] = []
+        for a in call.args[1:]:       # args[0] is the resolved callable
+            ev += self.expr(a)
+        for kw in call.keywords:
+            ev += self.expr(kw.value)
+        return ev
+
+    def _cond(self, node: ast.Call) -> list[Event]:
+        ev = self.expr(node.args[0])
+        for op in node.args[3:]:
+            ev += self.expr(op)
+        bt = self.summary_of(self.resolve(node.args[1]), node.lineno)
+        bf = self.summary_of(self.resolve(node.args[2]), node.lineno)
+        if kinds(bt) != kinds(bf):
+            self.ex.emit(self.mod.name, Finding(
+                SCHED003, self.mod.rel, node.lineno,
+                f"lax.cond branches issue divergent collective sequences: "
+                f"{list(kinds(bt))} vs {list(kinds(bf))}"))
+        return ev + (bt if len(bt) >= len(bf) else bf)
+
+    def _switch(self, node: ast.Call) -> list[Event]:
+        ev = self.expr(node.args[0])
+        for op in node.args[2:]:
+            ev += self.expr(op)
+        branches = node.args[1]
+        sums: list[list[Event]] = []
+        if isinstance(branches, (ast.List, ast.Tuple)):
+            for b in branches.elts:
+                sums.append(self.summary_of(self.resolve(b), node.lineno))
+        if sums and any(kinds(s) != kinds(sums[0]) for s in sums[1:]):
+            self.ex.emit(self.mod.name, Finding(
+                SCHED003, self.mod.rel, node.lineno,
+                f"lax.switch branches issue divergent collective sequences: "
+                f"{[list(kinds(s)) for s in sums]}"))
+        longest = max(sums, key=len) if sums else []
+        return ev + longest
+
+    def _loop_combinator(self, node: ast.Call, term: str) -> list[Event]:
+        body_idx = {"fori_loop": [2], "while_loop": [0, 1], "scan": [0],
+                    "map": [0], "associative_scan": [0]}[term]
+        ev: list[Event] = []
+        for i, a in enumerate(node.args):
+            if i not in body_idx:
+                ev += self.expr(a)
+        body: list[Event] = []
+        for i in body_idx:
+            if i < len(node.args):
+                body += self.summary_of(self.resolve(node.args[i]),
+                                        node.lineno)
+        if body:
+            self.ex.emit(self.mod.name, Finding(
+                SCHED004, self.mod.rel, node.lineno,
+                f"collective sequence {list(kinds(body))} inside "
+                f"lax.{term} body: superstep count leaves the static "
+                f"schedule"))
+        return ev + body
+
+    # -- statements --------------------------------------------------------
+    def stmts(self, body: list[ast.stmt]) -> list[Event]:
+        ev: list[Event] = []
+        for idx, st in enumerate(body):
+            # early-exit conditional: `if pred: ...; return` makes the rest
+            # of the block the implicit else branch — same divergence class
+            # as an explicit if/else (the `rec` short-circuit shape).
+            if isinstance(st, ast.If) and not st.orelse and st.body \
+                    and isinstance(st.body[-1], (ast.Return, ast.Raise)):
+                ev += self.expr(st.test)
+                branch = self.stmts(st.body)
+                rest = self.stmts(body[idx + 1:])
+                real = any(e.kind != RECURSION for e in branch + rest)
+                if real and not _terminates(st.body) \
+                        and kinds(branch) != kinds(rest) \
+                        and not is_structural(st.test):
+                    self.ex.emit(self.mod.name, Finding(
+                        SCHED001, self.mod.rel, st.lineno,
+                        f"early return under `if {ast.unparse(st.test)}` "
+                        f"diverges from the fall-through collective "
+                        f"sequence: {list(kinds(branch))} vs "
+                        f"{list(kinds(rest))}, and the predicate is not "
+                        f"provably replica-uniform"))
+                return ev + (branch if len(branch) >= len(rest) else rest)
+            ev += self.stmt(st)
+        return ev
+
+    def stmt(self, st: ast.stmt) -> list[Event]:
+        if isinstance(st, ast.If):
+            return self._if(st)
+        if isinstance(st, (ast.For, ast.AsyncFor)):
+            ev = self.expr(st.iter)
+            body = self.stmts(st.body) + self.stmts(st.orelse)
+            if any(e.kind != RECURSION for e in body):
+                self.ex.emit(self.mod.name, Finding(
+                    SCHED004, self.mod.rel, st.lineno,
+                    f"collective sequence {list(kinds(body))} inside a host "
+                    f"for-loop: superstep count leaves the static schedule"))
+            return ev + body
+        if isinstance(st, ast.While):
+            ev = self.expr(st.test)
+            body = self.stmts(st.body) + self.stmts(st.orelse)
+            if any(e.kind != RECURSION for e in body):
+                self.ex.emit(self.mod.name, Finding(
+                    SCHED004, self.mod.rel, st.lineno,
+                    f"collective sequence {list(kinds(body))} inside a host "
+                    f"while-loop: superstep count leaves the static "
+                    f"schedule"))
+            return ev + body
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self.bindings[st.name] = (
+                "fn", self.mod.name, f"{self.qualname}.{st.name}")
+            return []
+        if isinstance(st, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = st.value
+            ev = self.expr(value)
+            targets = getattr(st, "targets", None) or \
+                ([st.target] if getattr(st, "target", None) else [])
+            if value is not None and len(targets) == 1 \
+                    and isinstance(targets[0], ast.Name):
+                t = self.resolve(value)
+                if t is not None:
+                    self.bindings[targets[0].id] = t
+            return ev
+        if isinstance(st, ast.Return):
+            return self.expr(st.value)
+        if isinstance(st, ast.Expr):
+            return self.expr(st.value)
+        if isinstance(st, ast.With):
+            ev = []
+            for item in st.items:
+                ev += self.expr(item.context_expr)
+            return ev + self.stmts(st.body)
+        if isinstance(st, ast.Try):
+            ev = self.stmts(st.body)
+            for h in st.handlers:
+                ev += self.stmts(h.body)
+            return ev + self.stmts(st.orelse) + self.stmts(st.finalbody)
+        if isinstance(st, (ast.Raise, ast.Assert)):
+            ev = self.expr(getattr(st, "exc", None) or
+                           getattr(st, "test", None))
+            return ev
+        return []
+
+    def _if(self, st: ast.If) -> list[Event]:
+        ev = self.expr(st.test)
+        body = self.stmts(st.body)
+        orelse = self.stmts(st.orelse)
+        if _terminates(st.body):
+            return ev + orelse
+        if _terminates(st.orelse):
+            return ev + body
+        if kinds(body) != kinds(orelse):
+            if not is_structural(st.test):
+                self.ex.emit(self.mod.name, Finding(
+                    SCHED001, self.mod.rel, st.lineno,
+                    f"branches of `if {ast.unparse(st.test)}` issue "
+                    f"divergent collective sequences "
+                    f"{list(kinds(body))} vs {list(kinds(orelse))} and the "
+                    f"predicate is not provably replica-uniform"))
+            return ev + (body if len(body) >= len(orelse) else orelse)
+        return ev + body
+
+
+def analyze(modules: dict[str, Module]) -> tuple[list[Finding],
+                                                 ScheduleExtractor]:
+    ex = ScheduleExtractor(modules)
+    findings = ex.run()
+    return findings, ex

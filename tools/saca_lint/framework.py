@@ -1,0 +1,163 @@
+"""saca-lint rule framework: findings, registry, pragmas, baseline.
+
+Suppression contract
+--------------------
+A finding is suppressed by an inline pragma **with a justification**::
+
+    TRACE_COUNTS["k"] += 1  # saca-lint: allow[TRACE001] trace-time counter
+
+The pragma may sit on the flagged line or on a comment line directly
+above it. A pragma without justification text does NOT suppress — the
+finding stays active and gains a note; this is what makes every
+suppression "individually justified" checkable by machine.
+
+Baseline
+--------
+`tools/saca_lint/baseline.txt` holds one finding key per line
+(`path:rule:line`). Findings in the baseline are reported as grandfathered
+and do not fail `--check`; `--strict` (nightly) fails on any non-empty
+baseline and on stale pragmas, so suppressions can't rot silently.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from pathlib import Path
+
+from .astutil import REPO, Module
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.txt"
+
+PRAGMA_RE = re.compile(
+    r"#\s*saca-lint:\s*allow\[([A-Z]+\d+(?:\s*,\s*[A-Z]+\d+)*)\]\s*(.*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class RuleInfo:
+    rule_id: str
+    name: str
+    summary: str
+
+
+#: rule_id -> RuleInfo; populated by the rule modules at import time.
+RULES: dict[str, RuleInfo] = {}
+
+
+def rule(rule_id: str, name: str, summary: str) -> str:
+    RULES[rule_id] = RuleInfo(rule_id, name, summary)
+    return rule_id
+
+
+LINT001 = rule(
+    "LINT001", "stale-suppression",
+    "a `saca-lint: allow[...]` pragma that no current finding matches — "
+    "the violation it excused is gone; delete the pragma")
+
+
+@dataclasses.dataclass
+class Finding:
+    rule_id: str
+    path: str            # repo-relative posix path
+    line: int
+    message: str
+    suppressed: bool = False
+    justification: str = ""
+    baselined: bool = False
+
+    @property
+    def key(self) -> str:
+        return f"{self.path}:{self.rule_id}:{self.line}"
+
+    def render(self) -> str:
+        tag = ""
+        if self.suppressed:
+            tag = f"  [suppressed: {self.justification}]"
+        elif self.baselined:
+            tag = "  [baselined]"
+        return f"{self.path}:{self.line}: {self.rule_id} {self.message}{tag}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Pragma:
+    path: str
+    line: int            # line the pragma applies to (not where it sits)
+    rules: tuple[str, ...]
+    justification: str
+    pragma_line: int     # where the comment physically is
+
+
+def scan_pragmas(mod: Module) -> list[Pragma]:
+    """Collect pragmas; a comment-only pragma line covers the next line."""
+    out: list[Pragma] = []
+    lines = mod.source.splitlines()
+    for i, text in enumerate(lines, start=1):
+        m = PRAGMA_RE.search(text)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group(1).split(","))
+        just = m.group(2).strip()
+        target = i
+        if text.lstrip().startswith("#"):
+            # standalone comment: applies to the next source line (blank
+            # and further comment lines skipped, so a pragma can sit atop
+            # or inside an explanatory comment block)
+            j = i
+            while j < len(lines) and (not lines[j].strip()
+                                      or lines[j].lstrip().startswith("#")):
+                j += 1
+            target = j + 1
+        out.append(Pragma(path=mod.rel, line=target, rules=rules,
+                          justification=just, pragma_line=i))
+    return out
+
+
+def apply_pragmas(findings: list[Finding], pragmas: list[Pragma]
+                  ) -> tuple[list[Pragma], list[Finding]]:
+    """Mark findings suppressed in place.
+
+    Returns (stale_pragmas, unjustified) — pragmas that matched nothing,
+    and findings whose pragma carried no justification text.
+    """
+    by_site: dict[tuple[str, int], list[Pragma]] = {}
+    for p in pragmas:
+        by_site.setdefault((p.path, p.line), []).append(p)
+    used: set[Pragma] = set()
+    unjustified: list[Finding] = []
+    for f in findings:
+        for p in by_site.get((f.path, f.line), []):
+            if f.rule_id not in p.rules:
+                continue
+            used.add(p)
+            if p.justification:
+                f.suppressed = True
+                f.justification = p.justification
+            else:
+                f.message += "  (pragma present but missing justification)"
+                unjustified.append(f)
+    stale = [p for p in pragmas if p not in used]
+    return stale, unjustified
+
+
+def load_baseline(path: Path) -> set[str]:
+    if not path.exists():
+        return set()
+    keys = set()
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if line and not line.startswith("#"):
+            keys.add(line)
+    return keys
+
+
+def write_baseline(path: Path, findings: list[Finding]) -> None:
+    active = sorted(f.key for f in findings if not f.suppressed)
+    header = ("# saca-lint baseline — grandfathered findings (path:rule:line).\n"
+              "# Keep this file EMPTY: fix or pragma-suppress findings instead.\n")
+    path.write_text(header + "".join(k + "\n" for k in active))
+
+
+def rel_to_repo(path: Path) -> str:
+    try:
+        return path.resolve().relative_to(REPO).as_posix()
+    except ValueError:
+        return path.as_posix()

@@ -1,0 +1,410 @@
+"""THREAD rules: serve-tier thread-safety over lock-owning classes.
+
+The model is deliberately shaped like `SAServer`: a class owns
+`threading` lock attributes, spawns daemon threads with
+``threading.Thread(target=self._method)``, and shares plain attributes
+between those threads and its public (caller-thread) API.
+
+Analysis per class:
+
+* **Execution contexts.** Each thread entry method is its own context;
+  methods reachable only from an entry inherit its context; everything
+  else (public API, dunder hooks) runs in the caller context. An
+  attribute is *shared* when its accesses span ≥ 2 contexts.
+* **Lock inheritance.** A helper whose every call site sits inside
+  ``with self.<lock>`` is lock-inherited (`_shed_locked` /
+  `_oldest_age_us` in the serve tier); its accesses count as locked.
+* **THREAD001** — a shared attribute is written/mutated outside the
+  lock. `__init__` is exempt (no threads yet); attributes holding
+  thread-safe types (`queue.Queue`, `threading.*`, `itertools.count`)
+  are exempt; objects with their own internal lock (e.g. `ServeMetrics`)
+  are accessed through methods, which read-only attribute access
+  doesn't flag.
+* **THREAD002** — condition discipline: ``cond.wait()`` with no
+  enclosing retest loop anywhere in the method (a woken waiter must
+  re-check its predicate), or ``notify``/``notify_all`` outside the
+  lock (undefined behaviour per the stdlib contract).
+* **THREAD003** — in a lock-owning class, a container-typed attribute
+  (deque/dict/list/set) is structurally mutated (append/popleft/
+  setitem/...) outside the lock — flagged regardless of context
+  analysis, because container mutation is never atomic enough to
+  reason away.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from .astutil import Module, attr_chain
+from .framework import Finding, rule
+
+THREAD001 = rule(
+    "THREAD001", "unlocked-cross-thread-write",
+    "attribute shared across thread contexts is written without holding "
+    "the class lock")
+THREAD002 = rule(
+    "THREAD002", "condition-discipline",
+    "cond.wait() without an enclosing retest loop, or notify/notify_all "
+    "outside the lock")
+THREAD003 = rule(
+    "THREAD003", "unlocked-container-mutation",
+    "container attribute of a lock-owning class mutated outside the lock")
+
+LOCK_CONSTRUCTORS = {"Lock", "RLock", "Condition", "Semaphore",
+                     "BoundedSemaphore"}
+SAFE_CONSTRUCTORS = {"Queue", "SimpleQueue", "LifoQueue", "PriorityQueue",
+                     "count", "Event", "local", "Barrier"}
+CONTAINER_CONSTRUCTORS = {"deque", "dict", "list", "set", "OrderedDict",
+                          "defaultdict", "Counter"}
+MUTATORS = {"append", "appendleft", "extend", "extendleft", "insert",
+            "pop", "popleft", "remove", "clear", "add", "discard",
+            "update", "setdefault"}
+EXEMPT_METHODS = {"__init__", "__post_init__"}
+
+
+@dataclasses.dataclass
+class Access:
+    attr: str
+    kind: str        # "read" | "write" | "mutate"
+    line: int
+    locked: bool
+    method: str
+
+
+@dataclasses.dataclass
+class CondCall:
+    lock_attr: str
+    op: str          # "wait" | "notify" | "notify_all"
+    line: int
+    locked: bool
+    in_loop: bool
+    method: str
+
+
+@dataclasses.dataclass
+class MethodCall:
+    callee: str
+    locked: bool
+    method: str
+
+
+class _MethodScanner(ast.NodeVisitor):
+    """One pass over a method body, tracking lock regions and loops."""
+
+    def __init__(self, cls: "_ClassInfo", method: str):
+        self.cls = cls
+        self.method = method
+        self.locked = False
+        self.loop_depth = 0
+
+    # -- lock regions ------------------------------------------------------
+    def visit_With(self, node: ast.With) -> None:
+        entered = False
+        for item in node.items:
+            ctx = item.context_expr
+            if isinstance(ctx, ast.Attribute) and \
+                    isinstance(ctx.value, ast.Name) and \
+                    ctx.value.id == "self" and ctx.attr in self.cls.locks:
+                entered = True
+            self.visit(ctx)
+        was = self.locked
+        self.locked = was or entered
+        for st in node.body:
+            self.visit(st)
+        self.locked = was
+
+    def visit_While(self, node: ast.While) -> None:
+        self.visit(node.test)
+        self.loop_depth += 1
+        for st in node.body + node.orelse:
+            self.visit(st)
+        self.loop_depth -= 1
+
+    def visit_For(self, node: ast.For) -> None:
+        self.visit(node.iter)
+        self.loop_depth += 1
+        for st in node.body + node.orelse:
+            self.visit(st)
+        self.loop_depth -= 1
+
+    def visit_FunctionDef(self, node) -> None:
+        pass                           # nested defs: separate concern
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Lambda(self, node) -> None:
+        pass
+
+    # -- accesses ----------------------------------------------------------
+    def _self_attr(self, node: ast.AST) -> str | None:
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name) and node.value.id == "self":
+            return node.attr
+        return None
+
+    def _record(self, attr: str, kind: str, line: int) -> None:
+        self.cls.accesses.append(Access(attr, kind, line, self.locked,
+                                        self.method))
+
+    def _record_targets(self, target: ast.AST, line: int) -> None:
+        attr = self._self_attr(target)
+        if attr is not None:
+            self._record(attr, "write", line)
+            return
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._record_targets(e, line)
+        elif isinstance(target, ast.Subscript):
+            attr = self._self_attr(target.value)
+            if attr is not None:
+                self._record(attr, "mutate", line)
+            else:
+                self.visit(target.value)
+            self.visit(target.slice)
+        elif isinstance(target, (ast.Attribute, ast.Starred)):
+            self.visit(target)
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        self.visit(node.value)
+        for t in node.targets:
+            self._record_targets(t, node.lineno)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self.visit(node.value)
+            self._record_targets(node.target, node.lineno)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self.visit(node.value)
+        attr = self._self_attr(node.target)
+        if attr is not None:
+            self._record(attr, "write", node.lineno)
+        else:
+            self._record_targets(node.target, node.lineno)
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        attr = self._self_attr(node)
+        if attr is not None:
+            self._record(attr, "read", node.lineno)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            owner = self._self_attr(func.value)
+            if owner is not None:
+                if owner in self.cls.locks and func.attr in (
+                        "wait", "wait_for", "notify", "notify_all"):
+                    self.cls.cond_calls.append(CondCall(
+                        owner, func.attr, node.lineno, self.locked,
+                        self.loop_depth > 0, self.method))
+                elif func.attr in MUTATORS:
+                    self._record(owner, "mutate", node.lineno)
+                else:
+                    self._record(owner, "read", node.lineno)
+                for a in node.args:
+                    self.visit(a)
+                for kw in node.keywords:
+                    self.visit(kw.value)
+                return
+            callee = self._self_attr(func)
+            if callee is not None and callee in self.cls.methods:
+                self.cls.calls.append(MethodCall(callee, self.locked,
+                                                 self.method))
+        # Thread(target=self._x) discovery
+        chain = attr_chain(func) or []
+        if chain and chain[-1] == "Thread":
+            for kw in node.keywords:
+                if kw.arg == "target":
+                    t = self._self_attr(kw.value)
+                    if t is not None:
+                        self.cls.entries.add(t)
+        self.generic_visit(node)
+
+
+class _ClassInfo:
+    def __init__(self, mod: Module, node: ast.ClassDef):
+        self.mod = mod
+        self.node = node
+        self.methods: dict[str, ast.FunctionDef] = {
+            n.name: n for n in node.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        self.locks: set[str] = set()
+        self.cond_locks: set[str] = set()
+        self.safe: set[str] = set()
+        self.containers: set[str] = set()
+        self.accesses: list[Access] = []
+        self.cond_calls: list[CondCall] = []
+        self.calls: list[MethodCall] = []
+        self.entries: set[str] = set()
+        self._classify_attrs()
+
+    def _classify_attrs(self) -> None:
+        init = self.methods.get("__init__")
+        bodies = ([init] if init else []) + [None]
+        for holder in bodies:
+            stmts = holder.body if holder else self.node.body
+            for st in ast.walk(ast.Module(body=stmts, type_ignores=[])):
+                value = None
+                target = None
+                if isinstance(st, ast.Assign) and len(st.targets) == 1:
+                    target, value = st.targets[0], st.value
+                elif isinstance(st, ast.AnnAssign) and st.value is not None:
+                    target, value = st.target, st.value
+                if value is None:
+                    continue
+                attr = None
+                if isinstance(target, ast.Attribute) and \
+                        isinstance(target.value, ast.Name) and \
+                        target.value.id == "self":
+                    attr = target.attr
+                elif holder is None and isinstance(target, ast.Name):
+                    attr = target.id       # class-level attribute
+                if attr is None:
+                    continue
+                ann = getattr(st, "annotation", None)
+                names = []
+                if isinstance(value, ast.Call):
+                    names = attr_chain(value.func) or []
+                ann_names = (attr_chain(ann) or []) if ann is not None else []
+                term = names[-1] if names else None
+                if term in LOCK_CONSTRUCTORS:
+                    self.locks.add(attr)
+                    if term == "Condition":
+                        self.cond_locks.add(attr)
+                elif term in SAFE_CONSTRUCTORS:
+                    self.safe.add(attr)
+                elif term in CONTAINER_CONSTRUCTORS \
+                        or (ann_names and ann_names[-1] in
+                            CONTAINER_CONSTRUCTORS) \
+                        or isinstance(value, (ast.Dict, ast.List, ast.Set,
+                                              ast.DictComp, ast.ListComp,
+                                              ast.SetComp)):
+                    self.containers.add(attr)
+
+    def scan(self) -> None:
+        for name, fn in self.methods.items():
+            scanner = _MethodScanner(self, name)
+            for st in fn.body:
+                scanner.visit(st)
+
+    # -- derived relations -------------------------------------------------
+    def lock_inherited(self) -> set[str]:
+        """Methods whose every call site is inside the lock (fixpoint)."""
+        sites: dict[str, list[MethodCall]] = {}
+        for c in self.calls:
+            sites.setdefault(c.callee, []).append(c)
+        inherited: set[str] = set()
+        changed = True
+        while changed:
+            changed = False
+            for m, calls in sites.items():
+                if m in inherited:
+                    continue
+                if all(c.locked or c.method in inherited for c in calls):
+                    inherited.add(m)
+                    changed = True
+        return inherited
+
+    def contexts(self) -> dict[str, frozenset]:
+        """method -> execution contexts ("caller" or entry-method names)."""
+        callers: dict[str, set[str]] = {}
+        for c in self.calls:
+            callers.setdefault(c.callee, set()).add(c.method)
+        ctx: dict[str, set] = {m: set() for m in self.methods}
+        for e in self.entries:
+            if e in ctx:
+                ctx[e].add(e)
+        for _ in range(len(self.methods) + 1):
+            changed = False
+            for m in self.methods:
+                base = set(ctx[m])
+                for caller in callers.get(m, ()):  # inherit callers' ctx
+                    base |= ctx.get(caller, set())
+                if m not in self.entries and m not in callers:
+                    base.add("caller")
+                # a method with internal callers may also be public API,
+                # but treating it as internal-only keeps the rule focused
+                # on provable cross-thread pairs.
+                if base != ctx[m]:
+                    ctx[m] = base
+                    changed = True
+            if not changed:
+                break
+        for m in ctx:
+            if not ctx[m]:
+                ctx[m] = {"caller"}
+        return {m: frozenset(s) for m, s in ctx.items()}
+
+
+def analyze(modules: dict[str, Module]) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in modules.values():
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                cls = _ClassInfo(mod, node)
+                if not cls.locks:
+                    continue           # lock-free classes are out of scope
+                cls.scan()
+                findings += _check_class(cls)
+    return findings
+
+
+def _check_class(cls: _ClassInfo) -> list[Finding]:
+    out: list[Finding] = []
+    inherited = cls.lock_inherited()
+    ctx = cls.contexts()
+
+    def eff_locked(a: Access) -> bool:
+        return a.locked or a.method in inherited
+
+    # THREAD001: shared attribute written outside the lock
+    by_attr: dict[str, list[Access]] = {}
+    for a in cls.accesses:
+        if a.method in EXEMPT_METHODS:
+            continue
+        if a.attr in cls.locks or a.attr in cls.safe:
+            continue
+        by_attr.setdefault(a.attr, []).append(a)
+    for attr, accs in sorted(by_attr.items()):
+        ctxs = set()
+        for a in accs:
+            ctxs |= ctx[a.method]
+        if len(ctxs) < 2:
+            continue
+        for a in accs:
+            if a.kind == "mutate" and a.attr in cls.containers:
+                continue               # THREAD003's domain
+            if a.kind in ("write", "mutate") and not eff_locked(a):
+                out.append(Finding(
+                    THREAD001, cls.mod.rel, a.line,
+                    f"`{cls.node.name}.{attr}` is shared across thread "
+                    f"contexts {sorted(ctxs)} but written in "
+                    f"`{a.method}` without holding the lock"))
+
+    # THREAD002: condition discipline
+    for c in cls.cond_calls:
+        if c.op in ("wait",) and not c.in_loop:
+            out.append(Finding(
+                THREAD002, cls.mod.rel, c.line,
+                f"`self.{c.lock_attr}.wait()` in `{c.method}` has no "
+                f"enclosing retest loop — a woken waiter must re-check "
+                f"its predicate"))
+        if c.op in ("notify", "notify_all") and not (
+                c.locked or c.method in inherited):
+            out.append(Finding(
+                THREAD002, cls.mod.rel, c.line,
+                f"`self.{c.lock_attr}.{c.op}()` in `{c.method}` outside "
+                f"`with self.{c.lock_attr}` — undefined per the stdlib "
+                f"Condition contract"))
+
+    # THREAD003: container mutation outside the lock
+    for a in cls.accesses:
+        if a.method in EXEMPT_METHODS or a.attr not in cls.containers:
+            continue
+        if a.kind == "mutate" and not eff_locked(a):
+            out.append(Finding(
+                THREAD003, cls.mod.rel, a.line,
+                f"container `{cls.node.name}.{a.attr}` mutated in "
+                f"`{a.method}` outside the lock"))
+    return out

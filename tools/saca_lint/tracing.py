@@ -1,0 +1,354 @@
+"""TRACE rules: JAX trace hygiene over the jitted hot paths.
+
+Traced regions are discovered, not configured: any function decorated
+with `jax.jit` (directly, via ``@functools.partial(jax.jit, ...)``, or
+``jit(f)``), plus every callable handed to ``shard_map`` (shared with
+the collective extractor). Inside a traced region:
+
+* **TRACE001** — the function reads a module-level *mutable* global
+  (dict/list/set literal or Counter/defaultdict/deque constructor).
+  Closing over mutable state is a retrace/staleness hazard: the traced
+  value is baked in at trace time and silently goes stale (the repo's
+  own `TRACE_COUNTS` counters are the deliberate, suppressed instance).
+* **TRACE002** — a host-sync call (`float()`/`int()`/`bool()`,
+  `np.asarray`/`np.array`, `.item()`/`.tolist()`, `jax.device_get`) is
+  applied to a traced value. Under jit this either fails at trace time
+  or, worse, constant-folds a device value into the compiled artifact.
+  The same check runs over `SAServer._device_loop`, where a per-item
+  scalar sync stalls the double-buffered pipeline.
+* **TRACE003** — a traced (non-static) parameter steers host control
+  flow (`range()`, `if`/`while` tests, `.bit_length()`): it must be a
+  Python scalar, so every distinct value triggers a retrace — the
+  class of bug that burns the compiled-builder cache.
+
+Dataflow is a single forward pass per function: traced-ness seeds at
+the non-static parameters (for shard_map bodies: the positional
+parameters — keyword-only ones are partial-bound config by repo
+convention) and propagates through jnp/jax ops, indexing and
+arithmetic; `.shape`/`.dtype`/`.ndim`/`len()` reads are static and
+*clear* it.
+"""
+from __future__ import annotations
+
+import ast
+
+from .astutil import Module, SymbolTable, attr_chain, const_str_tuple, \
+    iter_functions, symbols
+from .framework import Finding, rule
+
+TRACE001 = rule(
+    "TRACE001", "jit-closes-over-mutable-global",
+    "jit/shard_map-traced callable reads a module-level mutable global "
+    "(value is baked in at trace time; mutation is a retrace/staleness "
+    "hazard)")
+TRACE002 = rule(
+    "TRACE002", "host-sync-in-traced-region",
+    "host-synchronising call (float/int/bool, np.asarray, .item(), "
+    ".tolist(), jax.device_get) applied to a traced value inside a jitted "
+    "region or the serve device loop")
+TRACE003 = rule(
+    "TRACE003", "traced-param-in-host-control",
+    "non-static parameter of a jitted function steers host control flow "
+    "(range/if/while/.bit_length) — should be a static arg; every new "
+    "value retraces")
+
+MUTABLE_CONSTRUCTORS = {"dict", "list", "set", "Counter", "defaultdict",
+                        "deque", "OrderedDict"}
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "weak_type", "sharding"}
+SYNC_BUILTINS = {"float", "int", "bool", "complex"}
+SYNC_METHODS = {"item", "tolist", "__array__"}
+TRACED_ROOTS = {"jnp", "jax", "lax"}
+
+
+def _mutable_globals(mod: Module) -> dict[str, int]:
+    """Module-level name -> def line for mutable-container globals."""
+    out: dict[str, int] = {}
+    for node in mod.tree.body:
+        targets = []
+        value = None
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        if value is None:
+            continue
+        mutable = isinstance(value, (ast.Dict, ast.List, ast.Set,
+                                     ast.DictComp, ast.ListComp, ast.SetComp))
+        if isinstance(value, ast.Call):
+            chain = attr_chain(value.func) or []
+            mutable = bool(chain) and chain[-1] in MUTABLE_CONSTRUCTORS
+        if not mutable:
+            continue
+        for t in targets:
+            if isinstance(t, ast.Name):
+                out[t.id] = node.lineno
+    return out
+
+
+def _jit_regions(mod: Module):
+    """Yield (qualname, node, static_argnames) for jit-decorated defs."""
+    for qualname, node in iter_functions(mod):
+        for dec in node.decorator_list:
+            static = _jit_decorator_static(dec)
+            if static is not None:
+                yield qualname, node, set(static)
+                break
+
+
+def _jit_decorator_static(dec: ast.AST) -> tuple[str, ...] | None:
+    """None if not a jit decorator; else its static_argnames."""
+    chain = attr_chain(dec)
+    if chain and chain[-1] == "jit":
+        return ()
+    if isinstance(dec, ast.Call):
+        chain = attr_chain(dec.func) or []
+        if chain and chain[-1] == "jit":
+            for kw in dec.keywords:
+                if kw.arg in ("static_argnames", "static_argnums"):
+                    return const_str_tuple(kw.value)
+            return ()
+        if chain and chain[-1] == "partial" and dec.args:
+            inner_chain = attr_chain(dec.args[0]) or []
+            if inner_chain and inner_chain[-1] == "jit":
+                for kw in dec.keywords:
+                    if kw.arg in ("static_argnames", "static_argnums"):
+                        return const_str_tuple(kw.value)
+                return ()
+    return None
+
+
+class _Dataflow:
+    """Forward traced-ness propagation + sync/control checks for one fn."""
+
+    def __init__(self, mod: Module, sym: SymbolTable, qualname: str,
+                 node: ast.FunctionDef, traced_params: set[str],
+                 findings: list[Finding], check_trace003: bool):
+        self.mod = mod
+        self.qualname = qualname
+        self.node = node
+        self.findings = findings
+        self.traced: set[str] = set(traced_params)
+        self.params = traced_params
+        self.check_trace003 = check_trace003
+        self.np_aliases = {alias for alias, m in sym.mod_imports.items()
+                           if m == "numpy"}
+        self._flagged: set[tuple[str, int]] = set()
+
+    # -- traced-ness of an expression -------------------------------------
+    def is_traced(self, node: ast.AST | None) -> bool:
+        if node is None or isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.traced
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False
+            return self.is_traced(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_traced(node.value)
+        if isinstance(node, ast.Call):
+            chain = attr_chain(node.func) or []
+            if chain and chain[0] in TRACED_ROOTS:
+                # device op: result is traced unless it's a static query
+                return chain[-1] not in ("static_argnames",)
+            if chain and chain[0] in self.np_aliases:
+                return False        # numpy result lives on host
+            if isinstance(node.func, ast.Name):
+                if node.func.id in {"len"} | SYNC_BUILTINS:
+                    return False
+                # unknown local callable: traced iff any arg is
+                return any(self.is_traced(a) for a in node.args)
+            if isinstance(node.func, ast.Attribute):
+                if node.func.attr in SYNC_METHODS:
+                    return False
+                return self.is_traced(node.func.value) or \
+                    any(self.is_traced(a) for a in node.args)
+            return False
+        if isinstance(node, (ast.BinOp, ast.BoolOp, ast.Compare,
+                             ast.UnaryOp, ast.IfExp, ast.Tuple, ast.List)):
+            return any(self.is_traced(c) for c in ast.iter_child_nodes(node)
+                       if isinstance(c, ast.expr))
+        return False
+
+    # -- sync checks --------------------------------------------------------
+    def _check_sync(self, tree: ast.AST) -> None:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            site = None
+            if isinstance(node.func, ast.Name) \
+                    and node.func.id in SYNC_BUILTINS:
+                if any(self.is_traced(a) for a in node.args):
+                    site = f"{node.func.id}()"
+            chain = attr_chain(node.func) or []
+            if (len(chain) == 2 and chain[0] in self.np_aliases
+                    and chain[1] in ("asarray", "array", "copy")):
+                if any(self.is_traced(a) for a in node.args):
+                    site = f"{chain[0]}.{chain[1]}()"
+            if chain[-2:] == ["jax", "device_get"] or \
+                    chain[-1:] == ["device_get"]:
+                if any(self.is_traced(a) for a in node.args):
+                    site = "jax.device_get()"
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in SYNC_METHODS \
+                    and self.is_traced(node.func.value):
+                site = f".{node.func.attr}()"
+            if site and (site, node.lineno) not in self._flagged:
+                self._flagged.add((site, node.lineno))
+                self.findings.append(Finding(
+                    TRACE002, self.mod.rel, node.lineno,
+                    f"host sync {site} on a traced value inside "
+                    f"`{self.qualname}`"))
+
+    def _check_host_control(self) -> None:
+        if not self.check_trace003:
+            return
+
+        def names_in(tree):
+            return {n.id for n in ast.walk(tree) if isinstance(n, ast.Name)}
+
+        for node in ast.walk(self.node):
+            hot: set[str] = set()
+            where = None
+            if isinstance(node, (ast.If, ast.While)):
+                hot = names_in(node.test) & self.params
+                where = "an if/while test"
+            elif isinstance(node, ast.Call):
+                if isinstance(node.func, ast.Name) \
+                        and node.func.id == "range":
+                    hot = set().union(*(names_in(a) for a in node.args)) \
+                        & self.params if node.args else set()
+                    where = "range()"
+                elif isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "bit_length" \
+                        and isinstance(node.func.value, ast.Name):
+                    hot = {node.func.value.id} & self.params
+                    where = ".bit_length()"
+            for name in sorted(hot):
+                key = (f"003:{name}", node.lineno)
+                if key in self._flagged:
+                    continue
+                self._flagged.add(key)
+                self.findings.append(Finding(
+                    TRACE003, self.mod.rel, node.lineno,
+                    f"traced parameter `{name}` of `{self.qualname}` "
+                    f"steers host control flow ({where}); make it a "
+                    f"static arg or derive it from a .shape"))
+
+    # -- statement pass -----------------------------------------------------
+    def run(self) -> None:
+        self._walk(self.node.body)
+        self._check_host_control()
+
+    def _walk(self, body: list[ast.stmt]) -> None:
+        for st in body:
+            self._stmt(st)
+
+    def _assign_target(self, target: ast.AST, traced: bool) -> None:
+        if isinstance(target, ast.Name):
+            if traced:
+                self.traced.add(target.id)
+            else:
+                self.traced.discard(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._assign_target(e, traced)
+
+    def _stmt(self, st: ast.stmt) -> None:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.ClassDef)):
+            return                      # nested defs analyzed separately
+        if isinstance(st, ast.Assign):
+            self._check_sync(st.value)
+            t = self.is_traced(st.value)
+            for target in st.targets:
+                self._assign_target(target, t)
+            return
+        if isinstance(st, ast.AnnAssign) and st.value is not None:
+            self._check_sync(st.value)
+            self._assign_target(st.target, self.is_traced(st.value))
+            return
+        if isinstance(st, ast.AugAssign):
+            self._check_sync(st.value)
+            if self.is_traced(st.value):
+                self._assign_target(st.target, True)
+            return
+        if isinstance(st, ast.For):
+            self._check_sync(st.iter)
+            self._assign_target(st.target, self.is_traced(st.iter))
+            self._walk(st.body)
+            self._walk(st.orelse)
+            return
+        if isinstance(st, (ast.If, ast.While)):
+            self._check_sync(st.test)
+            self._walk(st.body)
+            self._walk(st.orelse)
+            return
+        if isinstance(st, ast.With):
+            for item in st.items:
+                self._check_sync(item.context_expr)
+            self._walk(st.body)
+            return
+        if isinstance(st, ast.Try):
+            self._walk(st.body)
+            for h in st.handlers:
+                self._walk(h.body)
+            self._walk(st.orelse)
+            self._walk(st.finalbody)
+            return
+        self._check_sync(st)
+
+
+def _param_names(node: ast.FunctionDef) -> tuple[set[str], set[str]]:
+    """(positional-or-keyword names, keyword-only names)."""
+    pos = {a.arg for a in node.args.args + node.args.posonlyargs}
+    kw = {a.arg for a in node.args.kwonlyargs}
+    return pos, kw
+
+
+def analyze(modules: dict[str, Module],
+            shard_map_bodies: set[tuple[str, str]]) -> list[Finding]:
+    findings: list[Finding] = []
+    func_index = {name: dict(iter_functions(m))
+                  for name, m in modules.items()}
+    for name, mod in modules.items():
+        sym = symbols(mod)
+        mutables = _mutable_globals(mod)
+        regions: list[tuple[str, ast.FunctionDef, set[str], bool]] = []
+        for qualname, node, static in _jit_regions(mod):
+            pos, kw = _param_names(node)
+            traced = (pos | kw) - static - {"self"}
+            regions.append((qualname, node, traced, True))
+        for m, q in sorted(shard_map_bodies):
+            if m == name and q in func_index[name]:
+                node = func_index[name][q]
+                pos, _kw = _param_names(node)
+                # keyword-only params are partial-bound static config
+                regions.append((q, node, pos - {"self"}, False))
+        # the serve device loop is a host thread, but everything it pulls
+        # off the staging queue is device-resident: per-item scalar syncs
+        # stall the pipeline exactly like a sync under jit.
+        for qualname, node in func_index[name].items():
+            if qualname.endswith("._device_loop"):
+                regions.append((qualname, node, set(), False))
+
+        seen: set[int] = set()
+        for qualname, node, traced, is_jit in regions:
+            if id(node) in seen:
+                continue
+            seen.add(id(node))
+            # TRACE001: reads of module-level mutable globals
+            reported: set[str] = set()
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Name) and sub.id in mutables \
+                        and sub.id not in reported:
+                    reported.add(sub.id)
+                    findings.append(Finding(
+                        TRACE001, mod.rel, sub.lineno,
+                        f"traced callable `{qualname}` reads module-level "
+                        f"mutable global `{sub.id}` (defined line "
+                        f"{mutables[sub.id]})"))
+            flow = _Dataflow(mod, sym, qualname, node, traced, findings,
+                             check_trace003=is_jit)
+            flow.run()
+    return findings
