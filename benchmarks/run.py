@@ -18,10 +18,10 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     from . import (bsp_throughput, data_plane_bench, kernels_bench,
                    query_throughput, roofline, sa_throughput, segments_bench,
-                   serve_slo, supersteps, table1_example, table2_covers,
-                   table3_rounds)
+                   serve_slo, sparse_bench, supersteps, table1_example,
+                   table2_covers, table3_rounds)
     mods = [table1_example, table2_covers, table3_rounds, supersteps,
-            sa_throughput, query_throughput, segments_bench,
+            sa_throughput, query_throughput, segments_bench, sparse_bench,
             data_plane_bench, kernels_bench, bsp_throughput, serve_slo]
     if args.roofline:
         mods.insert(mods.index(bsp_throughput), roofline)
@@ -29,6 +29,7 @@ def main(argv=None) -> None:
     # smoke mode (full grids are dedicated runs of those modules)
     modargs = {bsp_throughput: ["--smoke", "--out", ""],
                segments_bench: ["--smoke", "--out", ""],
+               sparse_bench: ["--smoke", "--out", ""],
                data_plane_bench: ["--smoke", "--out", ""],
                serve_slo: ["--smoke", "--out", ""]}
     failed = []

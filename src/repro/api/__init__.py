@@ -61,7 +61,17 @@ Three layers
    instead of rebuilding (`SuffixArrayIndex.save` / `.load` are the
    single-artifact conveniences).
 
-5. **Segmented serving** (`segments` + `SegmentedIndexStore`): a
+5. **Sparse indexing** (`repro.sparse`): any plan with
+   ``SAOptions(sample_rate=s)``, s > 1, makes `SuffixArrayIndex.build` /
+   `.from_docs` (and therefore segments, stores, the serving tier, and
+   the data plane) construct a `repro.sparse.SparseSuffixArrayIndex` —
+   the suffix array over every s-th position only, ~s× less index
+   memory, exact answers for every pattern of length ≥ s and a typed
+   `repro.sparse.PatternTooShortError` below that. `sample_rate` is part
+   of `SAOptions.fingerprint()`, so persisted dense and sparse artifacts
+   can never be confused.
+
+6. **Segmented serving** (`segments` + `SegmentedIndexStore`): a
    `SegmentedIndex` splits the corpus into independently-built segments
    so ingesting or deleting a document rebuilds ONE small segment instead
    of the corpus; queries fan a batch across segments through the same

@@ -123,6 +123,14 @@ def build_suffix_array(x, options: SAOptions | None = None,
     opts = options if options is not None else SAOptions()
     if overrides:
         opts = opts.replace(**overrides)
+    if opts.sample_rate > 1:
+        raise ValueError(
+            f"build_suffix_array builds the DENSE full-length suffix array "
+            f"(every registry backend's contract); sample_rate="
+            f"{opts.sample_rate} plans go through the facade — "
+            f"SuffixArrayIndex.build / .from_docs dispatch to "
+            f"repro.sparse.SparseSuffixArrayIndex, or call "
+            f"repro.sparse.build_sparse_suffix_array directly")
 
     x = np.asarray(x)
     if x.ndim != 1:

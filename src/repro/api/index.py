@@ -58,6 +58,13 @@ def longest_match_len(index, seq) -> int:
     Out-of-alphabet values in ``seq`` can never match, so they are masked
     out up front (windows containing them are skipped, not errors) —
     generated samples may legally contain tokens the corpus never used.
+
+    Against an index with a minimum answerable pattern length (a sparse
+    index's ``min_pattern_len == sample_rate``), the search floors at
+    that length: matches shorter than the floor report 0 (the index
+    cannot certify them), matches ≥ the floor are exact and identical to
+    the dense answer — monotonicity makes the floored binary search
+    sound.
     """
     seq = np.asarray(seq, np.int64).ravel()
     if len(seq) == 0 or index.n == 0:
@@ -72,7 +79,12 @@ def longest_match_len(index, seq) -> int:
             return False
         return bool(np.any(index.contains_batch(list(wins[valid]))))
 
+    floor = int(getattr(index, "min_pattern_len", 0))
     lo, hi = 0, len(seq)            # longest feasible is in [lo, hi]
+    if floor > 1:
+        if len(seq) < floor or not feasible(floor):
+            return 0                # any true match is below the floor
+        lo = floor
     while lo < hi:
         mid = (lo + hi + 1) // 2
         if feasible(mid):
@@ -131,9 +143,7 @@ class SuffixArrayIndex:
                  sigma: int | None = None):
         self.text = np.asarray(text, np.int64)
         self.sa = np.asarray(sa, np.int32)
-        if self.sa.shape != self.text.shape:
-            raise ValueError(f"sa shape {self.sa.shape} != text shape "
-                             f"{self.text.shape}")
+        self._check_shapes()
         n = len(self.text)
         self.doc_starts = (np.asarray(doc_starts, np.int64)
                            if doc_starts is not None
@@ -143,6 +153,17 @@ class SuffixArrayIndex:
         self._lcp = None if lcp is None else np.asarray(lcp, np.int64)
         self._sigma = None if sigma is None else int(sigma)
         self._device = None        # lazy (text, sa) device buffers
+
+    def _check_shapes(self) -> None:
+        """Text-vs-SA shape contract; `repro.sparse` relaxes it to n/s."""
+        if self.sa.shape != self.text.shape:
+            raise ValueError(f"sa shape {self.sa.shape} != text shape "
+                             f"{self.text.shape}")
+
+    #: shortest pattern this index answers exactly; 0 = no restriction.
+    #: `repro.sparse.SparseSuffixArrayIndex` overrides with its rate, and
+    #: `longest_match_len` / serving warmups floor their probes at it.
+    min_pattern_len = 0
 
     # ----------------------------------------------------------- construct
     @classmethod
@@ -158,6 +179,10 @@ class SuffixArrayIndex:
         opts = options if options is not None else SAOptions()
         if overrides:
             opts = opts.replace(**overrides)
+        if opts.sample_rate > 1 and cls is SuffixArrayIndex:
+            # facade dispatch: a sampled plan builds the sparse subclass
+            from ..sparse import SparseSuffixArrayIndex
+            return SparseSuffixArrayIndex.build(text, opts, sigma=sigma)
         text = np.asarray(text, np.int64)
         sa = build_suffix_array(text, opts)
         return cls(text, sa, shift=0, options=opts, sigma=sigma)
@@ -169,6 +194,9 @@ class SuffixArrayIndex:
         opts = options if options is not None else SAOptions()
         if overrides:
             opts = opts.replace(**overrides)
+        if opts.sample_rate > 1 and cls is SuffixArrayIndex:
+            from ..sparse import SparseSuffixArrayIndex
+            return SparseSuffixArrayIndex.from_docs(docs, opts, sigma=sigma)
         text, starts, n_docs = encode_docs(docs)
         sa = build_suffix_array(text, opts)
         return cls(text, sa, doc_starts=starts, shift=n_docs, options=opts,
@@ -388,6 +416,24 @@ class SuffixArrayIndex:
                                  np.asarray(off, np.int64).ravel()], axis=1)
                        if len(pos) else np.zeros((0, 2), np.int64))
         return out
+
+    # --------------------------------------------------- encoded fan-in API
+    def _counts_encoded(self, enc) -> np.ndarray:
+        """Counts for already-encoded patterns (`_encode_pattern` output).
+
+        The uniform per-segment primitive `repro.api.SegmentedIndex` fans
+        out over — encoded once globally, shift-adjusted per segment —
+        implemented by every index flavour (the sparse subclass resolves
+        it through its two-level plan instead of SA ranges)."""
+        lo, hi = batch_ranges(self, QueryBatch.from_encoded(self, enc))
+        return hi - lo
+
+    def _positions_encoded(self, enc) -> list:
+        """Sorted encoded positions per already-encoded pattern — the
+        locate-side companion of `_counts_encoded`."""
+        lo, hi = batch_ranges(self, QueryBatch.from_encoded(self, enc))
+        return [np.sort(self.sa[l:h].astype(np.int64))
+                for l, h in zip(lo, hi)]
 
     # ------------------------------------------------- serving-tier protocol
     def stage_encoded(self, enc):

@@ -88,6 +88,18 @@ class SAOptions:
                     merge whenever this many segments share a size tier
                     (sizes within one power of the fanin). Also excluded
                     from `fingerprint()` for the same reason.
+    sample_rate:    sampled-position indexing stride (Ayad et al.,
+                    arXiv:2310.09023). ``1`` (default) keeps the dense
+                    suffix array over every position; ``s > 1`` makes
+                    `repro.sparse.SparseSuffixArrayIndex` store the SA
+                    over positions ``{0, s, 2s, ...}`` only — index
+                    memory scales n/s, and queries are exact for every
+                    pattern of length ≥ s (shorter patterns raise
+                    `repro.sparse.PatternTooShortError`). Unlike the
+                    serving-layer knobs above this DOES change the
+                    persisted index structure, so it is part of
+                    `fingerprint()`: a dense checkpoint never warm-loads
+                    as sparse, nor across different rates.
     """
 
     backend: str = AUTO
@@ -104,6 +116,7 @@ class SAOptions:
     validate: bool = True
     segment_docs: int | None = None
     compact_fanin: int = 4
+    sample_rate: int = 1
 
     def __post_init__(self):
         if isinstance(self.schedule, str) and self.schedule not in SCHEDULES:
@@ -121,6 +134,9 @@ class SAOptions:
         if self.compact_fanin < 2:
             raise ValueError(
                 f"compact_fanin must be ≥ 2, got {self.compact_fanin}")
+        if self.sample_rate < 1:
+            raise ValueError(
+                f"sample_rate must be ≥ 1, got {self.sample_rate}")
 
     @property
     def schedule_fn(self) -> Callable[[int, int, int], int]:
@@ -138,7 +154,10 @@ class SAOptions:
         """Stable identity of the construction plan, for staleness checks.
 
         Covers the fields that *describe* the build (backend spelling, v0,
-        schedule, base_threshold, sort_impl, pack_keys) and deliberately
+        schedule, base_threshold, sort_impl, pack_keys, sample_rate —
+        the last one changes the persisted index *structure*, dense vs
+        sampled, so dense and sparse checkpoints can never be confused)
+        and deliberately
         excludes runtime objects (mesh, counters/stats sinks),
         execution-only knobs (cache, validate), and serving-layer
         segmentation knobs (segment_docs, compact_fanin — they shape how
@@ -153,9 +172,10 @@ class SAOptions:
         """
         sched = (self.schedule if isinstance(self.schedule, str)
                  else f"callable:{getattr(self.schedule, '__name__', 'anon')}")
-        return (f"plan-v1|backend={self.backend}|v0={self.v0}"
+        return (f"plan-v2|backend={self.backend}|v0={self.v0}"
                 f"|schedule={sched}|base={self.base_threshold}"
-                f"|sort={self.sort_impl}|pack={int(self.pack_keys)}")
+                f"|sort={self.sort_impl}|pack={int(self.pack_keys)}"
+                f"|rate={self.sample_rate}")
 
     def replace(self, **changes) -> "SAOptions":
         return dataclasses.replace(self, **changes)

@@ -311,7 +311,10 @@ class QuerySession:
         never enter the percentile pool. Returns the tick count run."""
         done = 0
         for m in pattern_lens:
-            m = max(int(m), 1)
+            # floor by the index's minimum answerable length (a sparse
+            # index rejects shorter patterns instead of compiling them)
+            m = max(int(m), 1,
+                    int(getattr(self.index, "min_pattern_len", 0)))
             if self.index.n == 0 or self.index.sigma == 0:
                 continue        # nothing to compile against / no alphabet
             # value 0 is always in-alphabet when sigma ≥ 1

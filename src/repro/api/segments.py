@@ -42,7 +42,6 @@ import numpy as np
 
 from .index import SuffixArrayIndex, longest_match_len
 from .options import SAOptions
-from .query import QueryBatch, batch_ranges, stage_batch
 
 __all__ = ["Segment", "SegmentedIndex"]
 
@@ -166,7 +165,9 @@ class SegmentedIndex:
     def _new_segment(self, payloads, doc_ids) -> Segment:
         """Build ONE segment over `payloads` — this is the only place
         segment construction happens, so builder-cache traffic counts
-        segment builds exactly (the ingest-amortization metric)."""
+        segment builds exactly (the ingest-amortization metric). The
+        facade dispatch in `SuffixArrayIndex.from_docs` makes segments
+        sparse automatically when `options.sample_rate > 1`."""
         index = SuffixArrayIndex.from_docs(payloads, self.options,
                                            sigma=self._sigma)
         seg = Segment(seg_id=f"seg-{self._next_seg:06d}",
@@ -227,13 +228,22 @@ class SegmentedIndex:
         raise KeyError(f"no document with id {doc_id}")
 
     # ------------------------------------------------------------- queries
+    @property
+    def min_pattern_len(self) -> int:
+        """Shortest pattern this corpus answers exactly — the per-segment
+        sparse rate when `options.sample_rate > 1`, else 0 (no floor)."""
+        return self.options.sample_rate if self.options.sample_rate > 1 else 0
+
     def _encode_pattern(self, pattern) -> np.ndarray:
         """Validate a raw pattern against the *global* alphabet.
 
         Unlike `SuffixArrayIndex._encode_pattern` the result is NOT
         shifted — each segment has its own separator shift, applied at
         fan-out time. Same strictness rules: values must lie in
-        [0, sigma), checked only when the corpus is non-empty."""
+        [0, sigma), checked only when the corpus is non-empty; in sparse
+        mode (`options.sample_rate > 1`) patterns shorter than the rate
+        raise `repro.sparse.PatternTooShortError` here, before any
+        segment fan-out."""
         pat = np.asarray(pattern, np.int64).ravel()
         if len(pat):
             if int(pat.min()) < 0:
@@ -243,33 +253,32 @@ class SegmentedIndex:
                     f"pattern value {int(pat.max())} outside the corpus "
                     f"alphabet [0, {self.sigma}) — out-of-alphabet queries "
                     f"are rejected rather than silently counted as 0")
+        if len(pat) < self.min_pattern_len:
+            from ..sparse import PatternTooShortError
+            raise PatternTooShortError(len(pat), self.options.sample_rate)
         return pat
 
-    def _fan_ranges(self, enc) -> list[tuple[Segment, np.ndarray, np.ndarray]]:
-        """Run the jitted range kernel once per non-empty segment.
-
-        `enc` is a list of *raw* (unshifted) validated patterns; each
-        segment re-applies its own shift. Pattern values past a segment's
-        own data maximum simply never match — the separator band is below
-        `seg.index.shift`, so a shifted pattern can never alias it."""
-        out = []
-        for seg in self._segments:
-            if seg.index.n == 0:
-                continue
-            qb = QueryBatch.from_encoded(
-                seg.index, [e + seg.index.shift for e in enc])
-            lo, hi = batch_ranges(seg.index, qb)
-            out.append((seg, lo, hi))
-        return out
+    def _fan_encoded(self, enc) -> list[tuple[Segment, list]]:
+        """Per-segment shift application for a list of *raw* (unshifted)
+        validated patterns; empty segments are skipped. Pattern values
+        past a segment's own data maximum simply never match — the
+        separator band is below `seg.index.shift`, so a shifted pattern
+        can never alias it."""
+        return [(seg, [np.asarray(e, np.int64) + seg.index.shift
+                       for e in enc])
+                for seg in self._segments if seg.index.n]
 
     def count_batch(self, patterns) -> np.ndarray:
-        """Merged occurrence counts — per-segment (lo, hi) range widths
-        summed across segments; int64[len(patterns)]. The empty pattern
-        counts the total encoded length `n`, exactly as monolithic."""
+        """Merged occurrence counts — each segment resolves the batch
+        through its own engine (`_counts_encoded`: SA range widths dense,
+        the two-level verified plan sparse) and counts add;
+        int64[len(patterns)]. The empty pattern counts the total encoded
+        length `n`, exactly as monolithic (dense mode only — sparse mode
+        rejects it as too short)."""
         enc = [self._encode_pattern(p) for p in patterns]
         counts = np.zeros(len(enc), np.int64)
-        for _, lo, hi in self._fan_ranges(enc):
-            counts += hi - lo
+        for seg, shifted in self._fan_encoded(enc):
+            counts += seg.index._counts_encoded(shifted)
         return counts
 
     def contains_batch(self, patterns) -> np.ndarray:
@@ -288,10 +297,9 @@ class SegmentedIndex:
             raise ValueError("locate of an empty pattern is every position "
                              "in the corpus; enumerate documents instead")
         per: list[list] = [[] for _ in enc]
-        for seg, lo, hi in self._fan_ranges(enc):
-            for qi, (l, h) in enumerate(zip(lo, hi)):
-                if h > l:
-                    pos = np.sort(seg.index.sa[l:h].astype(np.int64))
+        for seg, shifted in self._fan_encoded(enc):
+            for qi, pos in enumerate(seg.index._positions_encoded(shifted)):
+                if len(pos):
                     local, off = seg.index.doc_offset(pos)
                     per[qi].append(np.stack(
                         [seg.doc_ids[local], off], axis=1))
@@ -335,26 +343,21 @@ class SegmentedIndex:
         Same double-buffering contract as the monolithic
         `SuffixArrayIndex.stage_encoded` — the transfers ride under the
         in-flight kernel of the previous batch."""
-        works = []
-        for seg in self._segments:
-            if seg.index.n == 0:
-                continue
-            qb = QueryBatch.from_encoded(
-                seg.index, [np.asarray(e, np.int64) + seg.index.shift
-                            for e in enc])
-            works.append((seg, qb, stage_batch(seg.index, qb)))
-        return (len(enc), works)
+        return (len(enc), [(seg, seg.index.stage_encoded(shifted))
+                           for seg, shifted in self._fan_encoded(enc)])
 
     def ranges_staged(self, work):
-        """Execute staged per-segment kernels and merge. Returns
+        """Execute staged per-segment work items and merge. Returns
         ``(lo, hi)`` where ``lo`` is all-zero and ``hi`` the merged count
         per pattern — the *virtual* merged range [0, count): per-segment
         SA ranks don't compose into global ranks, so only the width
-        survives the merge (documented in docs/api.md)."""
+        survives the merge (documented in docs/api.md). Delegating to
+        each segment's own `ranges_staged` keeps the fan-out uniform
+        across dense and sparse segments — both report exact widths."""
         k, works = work
         counts = np.zeros(k, np.int64)
-        for seg, qb, staged in works:
-            lo, hi = batch_ranges(seg.index, qb, staged=staged)
+        for seg, w in works:
+            lo, hi = seg.index.ranges_staged(w)
             counts += hi - lo
         return np.zeros(k, np.int64), counts
 

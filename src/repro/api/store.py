@@ -65,6 +65,7 @@ FORMAT_VERSION = 1
 SEG_FORMAT_VERSION = 1
 
 _KIND = "suffix-array-index"
+_SPARSE_KIND = "sparse-suffix-array-index"
 _SEG_KIND = "segmented-suffix-array-index"
 
 
@@ -105,13 +106,18 @@ def save_index(path: str, index: SuffixArrayIndex, *, step: int = 0) -> str:
     segment is detectable against the corpus manifest.
     """
     opts = index.options
+    rate = int(getattr(index, "sample_rate", 1))
     extras = {
         "format": FORMAT_VERSION,
-        "kind": _KIND,
+        # a sparse index persists under its own kind: its `sa` leaf covers
+        # only every rate-th position, so a dense reader must refuse it
+        # (and vice versa) even before the fingerprint check
+        "kind": _SPARSE_KIND if rate > 1 else _KIND,
         "n": index.n,
         "n_docs": index.n_docs,
         "shift": index.shift,
         "sigma": index.sigma,
+        "sample_rate": rate,
         "has_lcp": index._lcp is not None,
         "options_fingerprint": opts.fingerprint(),
         # the plan fields themselves, so load_index can reconstruct the
@@ -125,6 +131,7 @@ def save_index(path: str, index: SuffixArrayIndex, *, step: int = 0) -> str:
             "base_threshold": opts.base_threshold,
             "sort_impl": opts.sort_impl,
             "pack_keys": opts.pack_keys,
+            "sample_rate": opts.sample_rate,
         },
         "corpus_sha256": corpus_fingerprint(index.text),
         "created_unix": time.time(),
@@ -167,10 +174,15 @@ def load_index(path: str, *, options: SAOptions | None = None,
             f"— rolled back or partially synced")
     manifest = _read_manifest(path, step)
     extras = manifest.get("extras", {})
-    if extras.get("kind") != _KIND:
+    if extras.get("kind") not in (_KIND, _SPARSE_KIND):
         raise StaleIndexError(
             f"{path!r} is not a suffix-array index artifact "
             f"(kind={extras.get('kind')!r})")
+    rate = int(extras.get("sample_rate", 1))
+    if (extras.get("kind") == _SPARSE_KIND) != (rate > 1):
+        raise StaleIndexError(
+            f"index at {path!r} records kind={extras.get('kind')!r} but "
+            f"sample_rate={rate} — manifest tampered or half-written")
     if extras.get("format") != FORMAT_VERSION:
         raise StaleIndexError(
             f"index at {path!r} has format {extras.get('format')!r}, "
@@ -216,6 +228,12 @@ def load_index(path: str, *, options: SAOptions | None = None,
             # component is lost
             plan.pop("schedule", None)
         opts = SAOptions(**plan) if plan else None
+    if rate > 1:
+        from ..sparse import SparseSuffixArrayIndex
+        return SparseSuffixArrayIndex(
+            tree["text"], tree["sa"], sample_rate=rate,
+            doc_starts=tree["doc_starts"], shift=int(extras["shift"]),
+            sigma=int(extras["sigma"]), options=opts, lcp=tree.get("lcp"))
     return SuffixArrayIndex(
         tree["text"], tree["sa"], doc_starts=tree["doc_starts"],
         shift=int(extras["shift"]), sigma=int(extras["sigma"]),

@@ -19,6 +19,12 @@ class SAConfig:
                                 # shard-local sorts (see SAOptions.sort_impl)
     cache: bool = True          # compiled-builder cache + bucketed padding
     pack_keys: bool = True
+    sample_rate: int = 1        # >1: sparse sampled-position indexing
+                                # (repro.sparse) — index memory scales n/s,
+                                # patterns shorter than this raise
+                                # PatternTooShortError; must stay ≤ the
+                                # dedup/gate gram lengths below (validated
+                                # by PipelineConfig)
     axis: str = "bsp"
     store_dir: str = ""         # IndexStore root for serving ("" = build
                                 # in-process, never persist)
@@ -76,7 +82,8 @@ class SAConfig:
                          mesh=mesh, axis=self.axis,
                          pack_keys=self.pack_keys,
                          counters=counters, stats=stats,
-                         compact_fanin=self.compact_fanin)
+                         compact_fanin=self.compact_fanin,
+                         sample_rate=self.sample_rate)
 
 
 CONFIG = SAConfig()

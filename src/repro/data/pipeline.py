@@ -111,6 +111,23 @@ class PipelineConfig:
         if self.gate_policy not in GATE_POLICIES:
             raise ValueError(f"unknown gate_policy {self.gate_policy!r}; "
                              f"expected one of {GATE_POLICIES}")
+        rate = self.options.sample_rate if self.options is not None else 1
+        if rate > 1:
+            # a sparse index answers exactly only for patterns ≥ its rate;
+            # every gram the plane queries must clear that bar, so the
+            # incompatibility is rejected at construction, not mid-stream
+            if rate > self.dedup_min_len:
+                raise ValueError(
+                    f"options.sample_rate={rate} > dedup_min_len="
+                    f"{self.dedup_min_len}: the sparse training index "
+                    f"cannot answer the dedup stage's {self.dedup_min_len}-"
+                    f"grams — lower sample_rate or raise dedup_min_len")
+            if rate > self.gate_min_len:
+                raise ValueError(
+                    f"options.sample_rate={rate} > gate_min_len="
+                    f"{self.gate_min_len}: the sparse eval index cannot "
+                    f"answer the contamination gate's {self.gate_min_len}-"
+                    f"grams — lower sample_rate or raise gate_min_len")
 
     @property
     def wants_index(self) -> bool:
@@ -197,6 +214,11 @@ class StreamingDedup:
                  *, chunk: int = 2048):
         if min_len < 1:
             raise ValueError(f"min_len must be ≥ 1, got {min_len}")
+        if index.options.sample_rate > min_len:
+            raise ValueError(
+                f"StreamingDedup over a sparse index needs min_len ≥ "
+                f"sample_rate (exact containment of every {min_len}-gram); "
+                f"got sample_rate={index.options.sample_rate}")
         self.index = index
         self.min_len = int(min_len)
         self.chunk = int(chunk)
@@ -232,11 +254,22 @@ class StreamingDedup:
         prior = self._prior_flags(docs)
         self.index.add_docs(docs, compact=False)      # the ONE build
         seg = self.index.segments[-1]
-        within = duplicate_gram_flags(seg.index, g, keep_first=True)
-        ends = seg.index._doc_ends
+        flat = seg.index
+        if getattr(flat, "sample_rate", 1) > 1:
+            # the within-shard gram-run rule needs the rank of EVERY shard
+            # position (dense SA + LCP) — build a transient dense index of
+            # just this shard. Sparse segment construction bypasses the
+            # builder cache entirely, so this dense build is still THE one
+            # builder-cache build per shard (same layout: encode_docs of
+            # the same docs ⇒ identical text/doc_starts).
+            flat = SuffixArrayIndex.from_docs(
+                docs, self.index.options.replace(sample_rate=1),
+                sigma=self.index._sigma)
+        within = duplicate_gram_flags(flat, g, keep_first=True)
+        ends = flat._doc_ends
         kept = []
         for j, d in enumerate(docs):
-            flags = within[seg.index.doc_starts[j]:ends[j]].copy()
+            flags = within[flat.doc_starts[j]:ends[j]].copy()
             st.within_hits += int(flags.sum())
             st.prior_hits += int(prior[j].sum())
             flags[:len(prior[j])] |= prior[j]
@@ -263,6 +296,12 @@ class ContaminationGate:
                  max_hits: int = 0, chunk: int = 4096):
         docs = [np.asarray(d, np.int64).ravel() for d in eval_docs]
         self.index = SuffixArrayIndex.from_docs(docs, options, sigma=sigma)
+        if int(min_len) < self.index.min_pattern_len:
+            raise ValueError(
+                f"gate min_len={min_len} is below the eval index's minimum "
+                f"answerable pattern length "
+                f"({self.index.min_pattern_len} = its sample_rate) — the "
+                f"gate's grams could not be checked exactly")
         self.min_len = int(min_len)
         self.max_hits = int(max_hits)
         self.chunk = int(chunk)

@@ -219,7 +219,12 @@ class SAServer:
             batch_buckets = [1 << k for k in range(b.bit_length())
                              if (1 << k) <= b]
         done = 0
-        for m in sorted({pow2_bucket(int(l), floor=_MIN_LEN_BUCKET)
+        # a sparse index rejects patterns below its rate, and its real
+        # traffic only ever lands on length buckets ≥ that rate — floor
+        # the warmed shapes the same way
+        floor = max(_MIN_LEN_BUCKET,
+                    int(getattr(self.index, "min_pattern_len", 0)))
+        for m in sorted({pow2_bucket(int(l), floor=floor)
                          for l in pattern_lens}):
             for b in batch_buckets:
                 pats = [np.zeros(m, np.int64)] * int(b)

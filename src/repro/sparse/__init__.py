@@ -1,0 +1,44 @@
+"""repro.sparse — sampled-position suffix-array indexing.
+
+The dense `repro.api.SuffixArrayIndex` stores one SA entry per text
+position: ~4 bytes/char for the SA alone, more once the LCP is cached.
+That footprint — not build FLOPs — is what caps single-device corpora
+around a few hundred thousand characters (and what
+Haag/Kurpicz/Sanders/Schimek, arXiv:2412.10160, argue decides practical
+SACA). This package applies the paper's own sampling idea to the *index*
+rather than the construction: a **sparse suffix array** (Ayad et al.,
+arXiv:2310.09023 — "Sparse Suffix and LCP Array: Simple, Direct, Small,
+and Fast") stores the suffix order of every ``sample_rate``-th position
+only, cutting index memory by the sampling factor (8–32× at the rates
+the data plane uses) and pushing single-device n into the tens of
+millions.
+
+Three modules:
+
+* `construct` — `build_sparse_suffix_array`: packed-word multi-key sort
+  of the non-overlapping s-char head windows (reusing the MSD word sort
+  from `repro.core.dcv_jax`) followed by stride-doubling tie-break, so
+  build cost and memory both scale with n/s;
+* `query` — the jitted two-level batched query kernel: a vectorised
+  double binary search over the **s shifted alignments** of every
+  pattern against the sparse SA, then a vectorised head-verification
+  pass against the raw text;
+* `index` — `SparseSuffixArrayIndex`, the facade class: byte-identical
+  `count_batch` / `locate_batch` / `contains_batch` / `longest_match`
+  results vs the dense index for every pattern of length ≥
+  ``sample_rate``; shorter patterns raise the typed
+  `PatternTooShortError` instead of returning wrong answers.
+
+Select it through the existing facade: any `SAOptions(sample_rate=s)`
+with ``s > 1`` makes `SuffixArrayIndex.build` / `.from_docs`,
+`SegmentedIndex`, the stores, and the data plane build sparse indexes.
+"""
+from .construct import build_sparse_suffix_array, sparse_lcp
+from .index import PatternTooShortError, SparseSuffixArrayIndex
+
+__all__ = [
+    "PatternTooShortError",
+    "SparseSuffixArrayIndex",
+    "build_sparse_suffix_array",
+    "sparse_lcp",
+]

@@ -1,0 +1,161 @@
+"""Sparse suffix-array construction: sampled heads + stride doubling.
+
+`build_sparse_suffix_array(text, s)` returns the text positions
+``{0, s, 2s, ...}`` sorted by the lexicographic order of their (full)
+suffixes — exactly the subsequence of the dense SA restricted to sampled
+positions (`tests/sparse/test_construct.py` pins that equivalence).
+
+The construction is the Ayad et al. (arXiv:2310.09023) plan specialised
+to evenly-spaced samples:
+
+1. **Head sort.** The s-char windows at multiples of s are
+   *non-overlapping*, so the sampled text is just the padded text
+   reshaped to [n/s, s]. Rows are packed most-significant-column-first
+   into uint64 words (the same packing rule as
+   `repro.core.dcv_jax._window_words`) and ordered by the MSD
+   packed-word sort `repro.core.dcv_jax._order_from_words` — one
+   introsort on the leading word, later words only re-sort surviving tie
+   runs. After this pass, ranks reflect the first s characters.
+2. **Stride doubling.** Sampled positions are closed under +s steps:
+   position ``i·s + h·s`` is itself the sampled index ``i + h``. So ties
+   refine exactly like Manber–Myers prefix doubling *in sampled units*:
+   round h re-sorts each tie run by the current rank of the suffix h
+   samples later (−1 past the end, which also orders prefix-equal
+   suffixes shortest-first). h doubles until no ties remain; ranks then
+   reflect ≥ n characters, i.e. the full suffix order.
+
+Everything is host numpy on O(n/s) arrays — the sparse path deliberately
+bypasses the compiled-builder cache (`repro.api.build`), whose contract
+is the dense full-length SA.
+
+`sparse_lcp` computes the companion sparse LCP array (longest common
+prefix of *consecutive sampled suffixes in sparse SA order*) by chunked
+vectorised comparison — lazy on the index, never needed for queries.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.dcv_jax import _order_from_words
+
+
+def sampled_positions(n: int, sample_rate: int) -> np.ndarray:
+    """The indexed text positions: every `sample_rate`-th, as int64."""
+    return np.arange(0, max(int(n), 0), int(sample_rate), dtype=np.int64)
+
+
+def _sampled_head_words(text: np.ndarray, ns: int, s: int) -> list:
+    """Pack the non-overlapping s-char head windows into uint64 word lists.
+
+    Window i covers text[i*s : (i+1)*s]; the text is padded to ns*s with
+    −1 (below every real character, so a window that runs past the end
+    compares smaller at its first padded column — end-of-text behaves as
+    the usual smallest sentinel). Values are shifted to non-negative and
+    packed most-significant-column-first, 64 // bits columns per word:
+    comparing word lists lexicographically equals comparing windows
+    lexicographically, exactly the `_window_words` contract.
+    """
+    lo = -1
+    hi = int(text.max()) if len(text) else 0
+    xp = np.full(ns * s, lo, np.int64)
+    xp[:len(text)] = text
+    bits = max(1, int(hi - lo).bit_length())
+    per_word = max(1, 64 // bits)
+    shift = np.uint64(bits)
+    words = []
+    for start in range(0, s, per_word):
+        w = np.zeros(ns, dtype=np.uint64)
+        for c in range(start, min(start + per_word, s)):
+            w = (w << shift) | (xp[c::s] - lo).astype(np.uint64)
+        words.append(w)
+    return words
+
+
+def build_sparse_suffix_array(text, sample_rate: int) -> np.ndarray:
+    """Sampled positions sorted by full-suffix order — int32[ceil(n/s)].
+
+    Output[k] is the k-th smallest sampled suffix's *text position* (a
+    multiple of `sample_rate`), directly comparable against the dense SA
+    filtered to multiples of s. `sample_rate` must be ≥ 2 — the dense
+    path already covers s = 1 (and goes through the backend registry +
+    builder cache instead).
+    """
+    s = int(sample_rate)
+    if s < 2:
+        raise ValueError(
+            f"sample_rate must be ≥ 2 for sparse construction, got {s} "
+            f"(s = 1 is the dense path: repro.api.build_suffix_array)")
+    text = np.asarray(text, np.int64).ravel()
+    n = len(text)
+    if n and int(text.min()) < 0:
+        raise ValueError("text values must be ≥ 0")
+    ns = -(-n // s)                       # ceil(n / s) sampled positions
+    if ns == 0:
+        return np.zeros(0, np.int32)
+
+    perm, is_start = _order_from_words(_sampled_head_words(text, ns, s))
+    rank = np.empty(ns, np.int64)
+    rank[perm] = np.cumsum(is_start) - 1
+
+    # stride doubling in sampled units: each round h refines ties by the
+    # rank h samples (= h·s characters) later; ranks reflect 2h·s chars
+    # after the round, so h ≥ ns/2 (the last round executed) settles every
+    # genuinely distinct pair and prefix-equal pairs order shortest-first
+    # through the −1 past-the-end key.
+    h = 1
+    while h < ns:
+        start_slot = np.flatnonzero(is_start)
+        run_id = np.cumsum(is_start) - 1
+        sizes = np.diff(start_slot, append=ns)
+        sl = np.flatnonzero(sizes[run_id] > 1)     # slots inside tie runs
+        if len(sl) == 0:
+            break
+        key2 = np.full(ns, -1, np.int64)
+        key2[:ns - h] = rank[h:]
+        p = perm[sl]
+        rid = run_id[sl]
+        local = np.lexsort((key2[p], rid))
+        perm[sl] = p[local]
+        kv = key2[perm[sl]]
+        if len(sl) > 1:
+            is_start[sl[1:]] = (rid[1:] != rid[:-1]) | (kv[1:] != kv[:-1])
+        rank[perm] = np.cumsum(is_start) - 1
+        h *= 2
+    return (perm * s).astype(np.int32)
+
+
+def sparse_lcp(text, sparse_sa, *, chunk: int = 64) -> np.ndarray:
+    """LCP of consecutive sparse-SA suffixes — int64[len(sparse_sa)].
+
+    ``out[k]`` (k ≥ 1) is the longest common prefix, in characters, of
+    the suffixes at ``sparse_sa[k-1]`` and ``sparse_sa[k]``; ``out[0]``
+    is 0 by convention, matching the dense Kasai layout. Computed by
+    chunked vectorised comparison: every still-tied pair advances `chunk`
+    characters per round, so total work is O(Σ lcp + ns·chunk) with no
+    per-character Python loop. Kasai's trick needs the rank of *every*
+    text position, which a sparse index precisely does not store.
+    """
+    text = np.asarray(text, np.int64).ravel()
+    ssa = np.asarray(sparse_sa, np.int64).ravel()
+    n, ns = len(text), len(ssa)
+    out = np.zeros(ns, np.int64)
+    if ns < 2:
+        return out
+    a, b = ssa[:-1], ssa[1:]
+    active = np.arange(ns - 1, dtype=np.int64)
+    off = np.zeros(ns - 1, np.int64)
+    step = np.arange(chunk, dtype=np.int64)
+    while len(active):
+        ia = (a[active] + off[active])[:, None] + step[None, :]
+        ib = (b[active] + off[active])[:, None] + step[None, :]
+        # distinct past-the-end sentinels: two suffixes ending at the same
+        # offset stop matching there (their common prefix is over), and a
+        # suffix never "matches" the other's real character past its end
+        va = np.where(ia < n, text[np.minimum(ia, n - 1)], np.int64(-1))
+        vb = np.where(ib < n, text[np.minimum(ib, n - 1)], np.int64(-2))
+        eq = va == vb
+        matched = np.where(eq.all(axis=1), chunk, np.argmax(~eq, axis=1))
+        out[active + 1] += matched
+        off[active] += matched
+        active = active[matched == chunk]
+    return out

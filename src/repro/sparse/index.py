@@ -1,0 +1,218 @@
+"""`SparseSuffixArrayIndex` — the sampled-position index behind the facade.
+
+Subclasses `repro.api.SuffixArrayIndex` and keeps its *exact* query
+semantics for every pattern of length ≥ ``sample_rate``:
+`count_batch` / `locate_batch` / `contains_batch` / `locate_docs_batch` /
+`longest_match` return byte-identical results to a dense index over the
+same text (the differential fuzz suite pins this cell by cell). What
+changes is the storage contract — ``self.sa`` holds only the suffix
+order of positions ``{0, s, 2s, ...}``, so the index is ~s× smaller —
+and the failure mode for patterns shorter than the rate: those raise the
+typed `PatternTooShortError` at encode time instead of returning wrong
+answers (a pattern of length < s can occur at a position no alignment
+anchors to a sampled suffix).
+
+Operations that intrinsically need the rank of *every* text position
+(`ngram_stats`, `duplicate_spans`, `cross_doc_duplicates`,
+`sa_ranges_batch`) raise `NotImplementedError` with a pointer to the
+dense index — the data plane builds a transient dense index per shard
+for exactly those (`repro.data.pipeline.StreamingDedup`).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..api.index import SuffixArrayIndex, encode_docs
+from ..api.options import SAOptions
+from ..api.query import QueryBatch, stage_batch
+from .construct import build_sparse_suffix_array, sparse_lcp
+from .query import sparse_ranges, verify_alignments
+
+
+class PatternTooShortError(ValueError):
+    """Pattern shorter than the index's ``sample_rate``.
+
+    A sparse index can only anchor occurrences of patterns with length ≥
+    its sampling stride (shorter occurrences may contain no sampled
+    position at a predictable alignment). Raised at pattern-encode time —
+    synchronously, before any device work — so callers distinguish "this
+    index cannot answer that" from a genuine 0 count. Subclasses
+    `ValueError` so existing pattern-validation handlers keep working.
+    """
+
+    def __init__(self, pattern_len: int, sample_rate: int):
+        self.pattern_len = int(pattern_len)
+        self.sample_rate = int(sample_rate)
+        super().__init__(
+            f"pattern of length {pattern_len} is shorter than this sparse "
+            f"index's sample_rate={sample_rate}; sparse queries are exact "
+            f"only for patterns of length ≥ sample_rate — use a dense "
+            f"index (sample_rate=1) for shorter patterns")
+
+
+class SparseSuffixArrayIndex(SuffixArrayIndex):
+    """Suffix-array index over every ``sample_rate``-th text position.
+
+    Construction (`build` / `from_docs`) runs the Ayad-style sampled
+    plan from `repro.sparse.construct`; queries run the two-level plan
+    from `repro.sparse.query` (jitted per-alignment double binary search
+    + vectorised head verification). Everything positional — `locate`
+    results, `doc_of` / `doc_offset`, document coordinates — is
+    unchanged: the *text* is stored densely, only the suffix *order* is
+    sampled.
+    """
+
+    def __init__(self, text, sa, *, sample_rate: int, doc_starts=None,
+                 shift: int = 0, options: SAOptions | None = None,
+                 lcp=None, sigma: int | None = None):
+        s = int(sample_rate)
+        if s < 2:
+            raise ValueError(
+                f"SparseSuffixArrayIndex needs sample_rate ≥ 2, got {s} "
+                f"(sample_rate=1 is the dense SuffixArrayIndex)")
+        self.sample_rate = s        # before super().__init__: _check_shapes
+        super().__init__(text, sa, doc_starts=doc_starts, shift=shift,
+                         options=options, lcp=lcp, sigma=sigma)
+        if self.options.sample_rate != s:
+            # keep the plan honest: fingerprint() must reflect the actual
+            # stored structure even when callers pass a mismatched plan
+            self.options = self.options.replace(sample_rate=s)
+
+    def _check_shapes(self) -> None:
+        ns = -(-self.n // self.sample_rate)
+        if self.sa.shape != (ns,):
+            raise ValueError(
+                f"sparse sa shape {self.sa.shape} != ({ns},) = "
+                f"ceil(n={self.n} / sample_rate={self.sample_rate})")
+
+    # ----------------------------------------------------------- construct
+    @classmethod
+    def build(cls, text, options: SAOptions | None = None, *,
+              sigma: int | None = None, **overrides):
+        """Index a single document at ``options.sample_rate`` (must be ≥ 2).
+
+        Deliberately bypasses the compiled-builder cache — its contract is
+        the dense full-length SA; sparse construction is host-side O(n/s).
+        """
+        opts = options if options is not None else SAOptions()
+        if overrides:
+            opts = opts.replace(**overrides)
+        text = np.asarray(text, np.int64)
+        sa = build_sparse_suffix_array(text, opts.sample_rate)
+        return cls(text, sa, sample_rate=opts.sample_rate, shift=0,
+                   options=opts, sigma=sigma)
+
+    @classmethod
+    def from_docs(cls, docs, options: SAOptions | None = None, *,
+                  sigma: int | None = None, **overrides):
+        """Index documents with the same sentinel-separator layout as the
+        dense `from_docs` — positions and (doc, offset) mapping identical."""
+        opts = options if options is not None else SAOptions()
+        if overrides:
+            opts = opts.replace(**overrides)
+        text, starts, n_docs = encode_docs(docs)
+        sa = build_sparse_suffix_array(text, opts.sample_rate)
+        return cls(text, sa, sample_rate=opts.sample_rate, doc_starts=starts,
+                   shift=n_docs, options=opts, sigma=sigma)
+
+    # ----------------------------------------------------------- structure
+    @property
+    def ns(self) -> int:
+        """Number of sampled (indexed) positions: ceil(n / sample_rate)."""
+        return len(self.sa)
+
+    @property
+    def min_pattern_len(self) -> int:
+        """Shortest pattern this index answers exactly (= sample_rate)."""
+        return self.sample_rate
+
+    @property
+    def lcp(self) -> np.ndarray:
+        """Sparse LCP array (consecutive sampled suffixes), lazy + cached."""
+        if self._lcp is None:
+            self._lcp = sparse_lcp(self.text, self.sa)
+        return self._lcp
+
+    # ------------------------------------------------------------- queries
+    def _encode_pattern(self, pattern) -> np.ndarray:
+        pat = super()._encode_pattern(pattern)
+        if len(pat) < self.sample_rate:
+            raise PatternTooShortError(len(pat), self.sample_rate)
+        return pat
+
+    def _counts_from_batch(self, batch: QueryBatch, *,
+                           staged=None) -> np.ndarray:
+        lo, hi = sparse_ranges(self, batch, staged=staged)
+        counts, _ = verify_alignments(self, batch, lo, hi)
+        return counts
+
+    def count_batch(self, patterns) -> np.ndarray:
+        """Exact occurrence counts — one jitted per-alignment search plus
+        one vectorised host verification pass for the whole batch."""
+        return self._counts_from_batch(self._as_batch(patterns))
+
+    def locate_batch(self, patterns) -> list:
+        """Sorted encoded start positions per pattern — byte-identical to
+        the dense index's `locate_batch` for patterns ≥ sample_rate."""
+        qb = self._as_batch(patterns)
+        lo, hi = sparse_ranges(self, qb)
+        _, positions = verify_alignments(self, qb, lo, hi,
+                                         want_positions=True)
+        return positions
+
+    def sa_ranges_batch(self, patterns):
+        raise NotImplementedError(
+            "a sparse index has no dense SA rank space — [lo, hi) ranges "
+            "over all n suffixes do not exist at sample_rate > 1; use "
+            "count_batch / locate_batch (exact), or a dense index")
+
+    # --------------------------------------------------- encoded fan-in API
+    def _counts_encoded(self, enc) -> np.ndarray:
+        qb = QueryBatch.from_encoded(self, enc)
+        return self._counts_from_batch(qb)
+
+    def _positions_encoded(self, enc) -> list:
+        qb = QueryBatch.from_encoded(self, enc)
+        lo, hi = sparse_ranges(self, qb)
+        _, positions = verify_alignments(self, qb, lo, hi,
+                                         want_positions=True)
+        return positions
+
+    # ------------------------------------------------- serving-tier protocol
+    def stage_encoded(self, enc):
+        batch = QueryBatch.from_encoded(self, enc)
+        return (batch, stage_batch(self, batch) if self.n else None)
+
+    def ranges_staged(self, work) -> tuple[np.ndarray, np.ndarray]:
+        """Resolve a staged work item to **virtual** (0, count) ranges.
+
+        The serving tier consumes ranges only as ``hi - lo`` widths; a
+        sparse index has no dense rank space to report, so it returns
+        ``[0, count)`` per pattern — widths (and therefore every
+        count/contains answer downstream) are exact.
+        """
+        batch, staged = work
+        counts = self._counts_from_batch(batch, staged=staged)
+        return np.zeros(len(counts), np.int64), counts
+
+    # ---------------------------------------------------------- statistics
+    def ngram_stats(self, k: int):
+        raise NotImplementedError(
+            "ngram_stats needs the rank of every text position (dense SA + "
+            "LCP); build a dense index (sample_rate=1) for corpus stats")
+
+    def duplicate_spans(self, min_len: int):
+        raise NotImplementedError(
+            "duplicate_spans needs the dense SA + LCP; "
+            "repro.data.pipeline.StreamingDedup builds a transient dense "
+            "index per shard for exactly this")
+
+    def cross_doc_duplicates(self, min_len: int):
+        raise NotImplementedError(
+            "cross_doc_duplicates needs the dense SA + LCP; build a dense "
+            "index (sample_rate=1) for this report")
+
+    def __repr__(self) -> str:
+        return (f"SparseSuffixArrayIndex(n={self.n}, ns={self.ns}, "
+                f"sample_rate={self.sample_rate}, n_docs={self.n_docs}, "
+                f"lcp={'cached' if self._lcp is not None else 'lazy'})")

@@ -1,0 +1,174 @@
+"""Two-level batched queries against a sparse suffix array.
+
+A pattern occurrence starting at text position q is anchored at the
+unique sampled position ``p = q + a`` with alignment ``a = (−q) mod s``
+(s = sample_rate): whenever the pattern length m is ≥ s, ``a < s ≤ m``
+guarantees p is a real sampled position inside the occurrence. So every
+occurrence is counted by exactly one of the s alignments, and the exact
+query plan is:
+
+1. **Suffix search (device).** `_sparse_ranges_kernel` — the jitted
+   vectorised double binary search of `repro.api.query._ranges_kernel`,
+   lifted from [B, 2] bound states to [B, s, 2]: alignment a of pattern
+   b searches the sparse SA for the block of sampled suffixes starting
+   with ``pat[a:]``. Every iteration gathers one [B, s, 2, L] window of
+   text and does one masked 3-way prefix compare; ceil(log2(ns + 1))
+   iterations resolve all B·s·2 bounds in a single XLA call.
+2. **Head verification (host).** `verify_alignments` — for each
+   candidate sampled position p in a hit range, confirm the ≤ s−1
+   characters *before* the anchor: ``text[p−a : p] == pat[:a]`` (and
+   p ≥ a). One vectorised gather + compare per alignment over all
+   candidates of the whole batch — no per-candidate Python. Verified
+   candidates yield occurrence positions q = p − a; counts are exact
+   and positions identical to the dense index's `locate_batch`.
+
+The kernel shares `QueryBatch`'s pow2 shape bucketing, so an open-ended
+pattern stream compiles O(log) kernel variants; `TRACE_COUNTS` mirrors
+the dense query engine's retrace accounting (`tests/sparse` pins it flat
+for reused buckets).
+"""
+from __future__ import annotations
+
+import collections
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: one event per actual jax trace of the sparse query kernel.
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def trace_events() -> int:
+    """Total number of jax traces performed by the sparse kernel so far."""
+    return sum(TRACE_COUNTS.values())
+
+
+@functools.partial(jax.jit, static_argnames=("sample_rate",))
+def _sparse_ranges_kernel(text, ssa, pats, lens, sample_rate: int):
+    """All patterns × all s alignments × both bounds, in one fori_loop.
+
+    For pattern row b and alignment a, the search key is the suffix
+    ``pats[b, a:lens[b]]`` and the rank space is the sparse SA (`ssa`
+    holds *text positions*, so gathers read the full text while bounds
+    live in [0, ns]). Bound 0 converges to the first sampled suffix ≥
+    the key, bound 1 to the first > it — `[lo, hi)` is the candidate
+    block per (pattern, alignment). Rows whose length is 0 (padding)
+    resolve to (0, ns) exactly like the dense kernel's empty patterns;
+    callers slice them off before verification. Returns (lo, hi), each
+    int32[B, s].
+    """
+    # saca-lint: allow[TRACE001] deliberate: trace-time retrace counter, mutated only while tracing, read by tests via trace_events()
+    TRACE_COUNTS["sparse_ranges_kernel"] += 1
+    n = text.shape[0]
+    ns = ssa.shape[0]
+    s = sample_rate
+    B, L = pats.shape
+    steps = max(int(ns).bit_length(), 1) + 1
+    col = jnp.arange(L, dtype=jnp.int32)
+    past_end = jnp.array(-1, text.dtype)   # below every real character
+    # alignment-shifted pattern view: sh_pats[b, a, l] = pats[b, a + l];
+    # columns past the row's true length are masked by `valid`, so the
+    # clamped out-of-range gather value never participates
+    aidx = jnp.arange(s, dtype=jnp.int32)[:, None] + col[None, :]   # [s, L]
+    sh_pats = pats[:, jnp.minimum(aidx, L - 1)]                     # [B, s, L]
+    valid = aidx[None, :, :] < lens[:, None, None]                  # [B, s, L]
+
+    def body(_, state):
+        lo, hi = state
+        active = lo < hi                                    # [B, s, 2]
+        mid = lo + (hi - lo) // 2
+        start = ssa[jnp.where(active, mid, 0)]              # [B, s, 2]
+        idx = start[..., None] + col[None, None, None, :]   # [B, s, 2, L]
+        chars = jnp.where(idx < n, text[jnp.minimum(idx, n - 1)], past_end)
+        pat = jnp.broadcast_to(sh_pats[:, :, None, :], chars.shape)
+        v = jnp.broadcast_to(valid[:, :, None, :], chars.shape)
+        diff = (chars != pat) & v
+        any_diff = diff.any(axis=-1)
+        first = jnp.argmax(diff, axis=-1)[..., None]
+        s_at = jnp.take_along_axis(chars, first, axis=-1)[..., 0]
+        p_at = jnp.take_along_axis(pat, first, axis=-1)[..., 0]
+        less = any_diff & (s_at < p_at)       # suffix < shifted pattern
+        greater = any_diff & (s_at > p_at)    # suffix > shifted pattern
+        # bound 0 moves right while suffix < key; bound 1 while suffix ≤ key
+        before = jnp.stack([less[..., 0], ~greater[..., 1]], axis=-1)
+        lo = jnp.where(active & before, mid + 1, lo)
+        hi = jnp.where(active & ~before, mid, hi)
+        return lo, hi
+
+    lo0 = jnp.zeros((B, s, 2), jnp.int32)
+    hi0 = jnp.full((B, s, 2), ns, jnp.int32)
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo0, hi0))
+    return lo[..., 0], lo[..., 1]
+
+
+def sparse_ranges(index, batch, *, staged=None):
+    """Level 1 for a whole `QueryBatch`: per-alignment candidate ranges.
+
+    Returns ``(lo, hi)`` int64[n_queries, s] — padding rows already
+    sliced off. An empty index maps everything to empty ranges. Pass
+    ``staged`` (from `repro.api.query.stage_batch`) to run against
+    buffers whose host→device transfer was already started, the serving
+    tier's double-buffer path.
+    """
+    batch.check_bound_to(index)
+    k, s = batch.n_queries, index.sample_rate
+    if index.ns == 0 or k == 0:
+        z = np.zeros((k, s), np.int64)
+        return z, z.copy()
+    text_d, sa_d = index._device_state()
+    pats_d, lens_d = (staged if staged is not None
+                      else (jnp.asarray(batch.pats), jnp.asarray(batch.lens)))
+    lo, hi = _sparse_ranges_kernel(text_d, sa_d, pats_d, lens_d, s)
+    return (np.asarray(lo)[:k].astype(np.int64),
+            np.asarray(hi)[:k].astype(np.int64))
+
+
+def verify_alignments(index, batch, lo, hi, *, want_positions: bool = False):
+    """Level 2: confirm candidate heads against the raw text.
+
+    ``(lo, hi)`` are `sparse_ranges` outputs. For alignment a, candidate
+    sampled position p matches iff ``p ≥ a`` and ``text[p−a:p] ==
+    pat[:a]`` — its occurrence starts at ``q = p − a``. Returns
+    ``(counts int64[k], positions)`` where positions is a list of sorted
+    int64 arrays (one per pattern) when ``want_positions``, else None.
+    One gather + compare per alignment over ALL candidates of the batch.
+    """
+    k = batch.n_queries
+    s = index.sample_rate
+    counts = np.zeros(k, np.int64)
+    ssa = index.sa.astype(np.int64)
+    text = index.text
+    pats = batch.pats
+    rows_acc: list = []
+    pos_acc: list = []
+    for a in range(s):
+        sizes = hi[:, a] - lo[:, a]
+        total = int(sizes.sum())
+        if total == 0:
+            continue
+        rows = np.repeat(np.arange(k, dtype=np.int64), sizes)
+        within = (np.arange(total, dtype=np.int64)
+                  - np.repeat(np.cumsum(sizes) - sizes, sizes))
+        p = ssa[np.repeat(lo[:, a], sizes) + within]
+        ok = p >= a
+        if a:
+            head_idx = (p[:, None] - a
+                        + np.arange(a, dtype=np.int64)[None, :])
+            head = text[np.clip(head_idx, 0, None)]   # clip: rows with p < a
+            ok &= (head == pats[rows, :a].astype(np.int64)).all(axis=1)
+        counts += np.bincount(rows[ok], minlength=k)
+        if want_positions:
+            rows_acc.append(rows[ok])
+            pos_acc.append(p[ok] - a)
+    if not want_positions:
+        return counts, None
+    if not rows_acc:
+        return counts, [np.zeros(0, np.int64) for _ in range(k)]
+    rows_cat = np.concatenate(rows_acc)
+    q_cat = np.concatenate(pos_acc)
+    order = np.lexsort((q_cat, rows_cat))
+    rows_cat, q_cat = rows_cat[order], q_cat[order]
+    splits = np.searchsorted(rows_cat, np.arange(1, k))
+    return counts, np.split(q_cat, splits)

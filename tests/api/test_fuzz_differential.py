@@ -184,3 +184,73 @@ def test_queries_match_oracle(family, cell, rep):
     for got, want in zip(idx.locate_batch(locatable),
                          ref.locate_batch(locatable)):
         np.testing.assert_array_equal(got, want, err_msg=msg)
+
+
+# ------------------------------------------- sparse sampled-position parity
+# sparse-vs-dense is its own differential axis on top of the backend
+# matrix: same corpus, same queries, the dense index as the oracle.
+# Pattern lengths straddle the sample_rate threshold (== rate is the
+# shortest legal pattern), and doc-spanning patterns check that the
+# head-verification step never matches across a separator. all_equal and
+# periodic corpora drive the stride-doubling tie-break through its
+# worst case (every sampled suffix shares every head window).
+SPARSE_RATES = (4, 8, 16, 32) if FULL else (4, 16)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("rate", SPARSE_RATES)
+@pytest.mark.parametrize("rep", REPS)
+def test_sparse_matches_dense(family, rate, rep):
+    from repro.sparse import PatternTooShortError, SparseSuffixArrayIndex
+
+    rng = _rng("sparse", family, rate, rep)
+    sigma = int(rng.integers(2, 32))
+    docs = [FAMILIES[family](rng, int(rng.integers(rate + 2, 4 * rate + 3)),
+                             sigma)
+            for _ in range(4)]
+
+    ref = SuffixArrayIndex.from_docs(docs, SAOptions(), sigma=sigma)
+    idx = SuffixArrayIndex.from_docs(docs, SAOptions(sample_rate=rate),
+                                     sigma=sigma)
+    assert isinstance(idx, SparseSuffixArrayIndex)
+    msg = f"{family} seed={SEED} rate={rate} rep={rep}"
+
+    # construction oracle: the dense SA restricted to sampled positions
+    np.testing.assert_array_equal(
+        idx.sa, ref.sa[np.asarray(ref.sa, np.int64) % rate == 0],
+        err_msg=msg)
+
+    pats = []
+    for m in (rate, rate + 1, 2 * rate - 1, 2 * rate):  # straddle threshold
+        for d in docs:
+            if len(d) >= m:                              # planted — must hit
+                at = int(rng.integers(0, len(d) - m + 1))
+                pats.append(np.asarray(d[at:at + m], np.int64))
+        pats.append(rng.integers(0, sigma, m))           # usually absent
+    # separator-spanning: a suffix of doc0 glued to a prefix of doc1 is
+    # NOT an occurrence unless it also appears inside a single document —
+    # the dense answer is the oracle either way
+    half = max(rate // 2, 1)
+    pats.append(np.concatenate([np.asarray(docs[0][-half:], np.int64),
+                                np.asarray(docs[1][:rate - half + 1],
+                                           np.int64)]))
+
+    np.testing.assert_array_equal(
+        idx.count_batch(pats), ref.count_batch(pats), err_msg=msg)
+    np.testing.assert_array_equal(
+        idx.contains_batch(pats), ref.contains_batch(pats), err_msg=msg)
+    for got, want in zip(idx.locate_batch(pats), ref.locate_batch(pats)):
+        np.testing.assert_array_equal(got, want, err_msg=msg)
+    for got, want in zip(idx.locate_docs_batch(pats),
+                         ref.locate_docs_batch(pats)):
+        np.testing.assert_array_equal(got, want, err_msg=msg)
+
+    # longest_match floors at the rate: identical to dense whenever the
+    # dense answer is a legal sparse pattern length, 0 below the floor
+    probe = np.asarray(docs[2][: 2 * rate], np.int64)
+    want_lm = ref.longest_match(probe)
+    assert idx.longest_match(probe) == (want_lm if want_lm >= rate else 0), \
+        msg
+
+    with pytest.raises(PatternTooShortError):
+        idx.count_batch([rng.integers(0, sigma, rate - 1)])

@@ -294,10 +294,61 @@ def test_fingerprint_covers_plan_not_runtime():
     assert base.fingerprint() == \
         SAOptions(backend="jax", cache=False, counters=object(),
                   stats=object(), validate=False).fingerprint()
-    # construction fields do
+    # construction fields do — sample_rate included: a sparse artifact
+    # answers a different query contract than a dense one
     for change in ({"v0": 7}, {"schedule": "fixed"}, {"base_threshold": 99},
-                   {"sort_impl": "lax"}, {"backend": "seq"}):
+                   {"sort_impl": "lax"}, {"backend": "seq"},
+                   {"sample_rate": 4}):
         assert base.replace(**change).fingerprint() != base.fingerprint()
+
+
+# ------------------------------------------------ sparse index persistence
+def test_sparse_roundtrip_and_rate_mismatch(tmp_path):
+    """Sparse save → load restores a SparseSuffixArrayIndex that answers
+    identically; loading against a plan with a different sample_rate (or
+    a dense plan) is stale, never a silently wrong index."""
+    from repro.sparse import SparseSuffixArrayIndex
+    docs = _docs(seed=31, max_len=80)
+    opts = SAOptions(sample_rate=4)
+    idx = SuffixArrayIndex.from_docs(docs, opts)
+    path = str(tmp_path / "sparse")
+    save_index(path, idx)
+    got = load_index(path, options=opts)
+    assert isinstance(got, SparseSuffixArrayIndex)
+    assert got.sample_rate == 4
+    assert np.array_equal(got.sa, idx.sa)
+    assert np.array_equal(got.text, idx.text)
+    pats = [docs[0][:4].tolist(), docs[0][:5].tolist(), [4, 4, 4, 4]]
+    assert got.count_batch(pats).tolist() == idx.count_batch(pats).tolist()
+    assert got.locate(pats[0]).tolist() == idx.locate(pats[0]).tolist()
+    # load WITHOUT options: the persisted plan re-attaches, rate included
+    restored = load_index(path)
+    assert isinstance(restored, SparseSuffixArrayIndex)
+    assert restored.options.sample_rate == 4
+    assert restored.options.fingerprint() == opts.fingerprint()
+    # mismatched rate → different plan fingerprint → stale
+    with pytest.raises(StaleIndexError, match="plan"):
+        load_index(path, options=opts.replace(sample_rate=8))
+    with pytest.raises(StaleIndexError, match="plan"):
+        load_index(path, options=SAOptions())      # dense plan, sparse disk
+
+
+def test_sparse_kind_rate_tamper_is_stale(tmp_path):
+    """A manifest whose kind and sample_rate disagree (hand-edited or
+    half-written) must refuse to load in BOTH directions."""
+    text = np.arange(64) % 5
+    for build_rate, forged in ((4, 1), (1, 4)):
+        idx = SuffixArrayIndex.build(text, SAOptions(sample_rate=build_rate))
+        path = str(tmp_path / f"r{build_rate}")
+        save_index(path, idx)
+        mpath = os.path.join(path, "step_00000000", "manifest.json")
+        with open(mpath) as f:
+            manifest = json.load(f)
+        manifest["extras"]["sample_rate"] = forged
+        with open(mpath, "w") as f:
+            json.dump(manifest, f)
+        with pytest.raises(StaleIndexError, match="tampered|half-written"):
+            load_index(path)
 
 
 # ------------------------------------------- restore_checkpoint hardening

@@ -1,0 +1,49 @@
+"""Planted trace-hygiene violations in a mock of the sparse two-level
+query kernel (parsed by saca-lint only, never imported by product code).
+
+The bad variant makes the three mistakes the real
+`repro.sparse.query._sparse_ranges_kernel` must avoid: an unjustified
+retrace counter, a host sync on a traced reduction, and a data-steered
+Python loop bound. The clean variant mirrors the real kernel's skeleton
+— shape-derived static loop bound, pragma'd counter, fori_loop — and
+must produce no findings."""
+import collections
+import functools
+
+import jax
+import jax.numpy as jnp
+
+RETRACES = collections.Counter()
+
+
+@functools.partial(jax.jit, static_argnames=("sample_rate",))
+def sparse_ranges_kernel_bad(text, ssa, pats, lens, sample_rate, depth):
+    RETRACES["sparse"] += 1  # PLANT:TRACE001-retrace
+    budget = float(lens.sum())  # PLANT:TRACE002-sync
+    lo = jnp.zeros((pats.shape[0], sample_rate, 2), jnp.int32)
+    hi = jnp.full((pats.shape[0], sample_rate, 2), ssa.shape[0], jnp.int32)
+    for _ in range(depth):  # PLANT:TRACE003-depth
+        mid = lo + (hi - lo) // 2
+        lo = jnp.where(mid < hi, mid + 1, lo)
+    return lo + budget
+
+
+# ---- clean: the real kernel's shape — must produce no findings ----------
+
+@functools.partial(jax.jit, static_argnames=("sample_rate",))
+def sparse_ranges_kernel_ok(text, ssa, pats, lens, sample_rate):
+    # saca-lint: allow[TRACE001] deliberate: trace-time retrace counter for tests
+    RETRACES["sparse_ok"] += 1
+    ns = ssa.shape[0]                    # static metadata, not traced
+    steps = max(int(ns).bit_length(), 1) + 1
+
+    def body(_, state):
+        lo, hi = state
+        mid = lo + (hi - lo) // 2
+        return jnp.where(mid < hi, mid + 1, lo), hi
+
+    B = pats.shape[0]
+    lo0 = jnp.zeros((B, sample_rate, 2), jnp.int32)
+    hi0 = jnp.full((B, sample_rate, 2), ns, jnp.int32)
+    lo, hi = jax.lax.fori_loop(0, steps, body, (lo0, hi0))
+    return lo[..., 0], lo[..., 1]

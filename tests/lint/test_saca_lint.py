@@ -103,6 +103,28 @@ def test_trace_rules():
     }
 
 
+def test_sparse_kernel_rules():
+    """The sparse query kernel's failure modes, planted in a mock: an
+    unjustified retrace counter, a host sync on a traced reduction, and
+    a data-steered loop bound — while the clean variant (the real
+    kernel's shape-derived static bound + pragma'd counter) stays quiet,
+    and the REAL `repro.sparse` package is clean in the same run."""
+    fixture = FIXTURES / "sparse_query_violations.py"
+    at = plant_lines(fixture)
+    sparse_pkg = REPO / "src" / "repro" / "sparse"
+    report = saca_lint.run([fixture, sparse_pkg])
+    assert found(report, fixture) == {
+        ("TRACE001", at["TRACE001-retrace"]),
+        ("TRACE002", at["TRACE002-sync"]),
+        ("TRACE003", at["TRACE003-depth"]),
+    }
+    assert all("sparse_query_violations" in f.path for f in report.active)
+    # the real package's one suppression is justified and live
+    sup = [f for f in report.suppressed if "src/repro/sparse" in f.path]
+    assert [f.rule_id for f in sup] == ["TRACE001"]
+    assert report.stale_pragmas == []
+
+
 def test_thread_rules():
     fixture = FIXTURES / "thread_violations.py"
     at = plant_lines(fixture)

@@ -1,0 +1,75 @@
+"""Sparse suffix-array construction: the sampled SA must equal the dense
+SA restricted to sampled positions (the brute-force oracle), across the
+corpus families that stress the stride-doubling tie-break; `sparse_lcp`
+must equal its naive per-pair definition."""
+import numpy as np
+import pytest
+
+from repro.api import SAOptions, build_suffix_array
+from repro.sparse import build_sparse_suffix_array, sparse_lcp
+
+
+def _oracle_sparse(text, rate):
+    sa = build_suffix_array(np.asarray(text, np.int64), backend="oracle")
+    sa = np.asarray(sa, np.int64)
+    return sa[sa % rate == 0]
+
+
+def _naive_lcp(text, ssa):
+    text = np.asarray(text, np.int64)
+    out = np.zeros(len(ssa), np.int64)
+    for i in range(1, len(ssa)):
+        a, b = int(ssa[i - 1]), int(ssa[i])
+        k = 0
+        while a + k < len(text) and b + k < len(text) \
+                and text[a + k] == text[b + k]:
+            k += 1
+        out[i] = k
+    return out
+
+
+CORPORA = {
+    "uniform": lambda rng, n: rng.integers(0, 5, n),
+    "binary": lambda rng, n: rng.integers(0, 2, n),
+    "all_equal": lambda rng, n: np.zeros(n, np.int64),
+    "periodic": lambda rng, n: np.tile([1, 0, 2], n // 3 + 1)[:n],
+    "large_alpha": lambda rng, n: rng.integers(0, 1 << 20, n),
+}
+
+
+@pytest.mark.parametrize("family", sorted(CORPORA))
+@pytest.mark.parametrize("rate", [2, 3, 4, 7, 16])
+def test_matches_dense_filtered_oracle(family, rate):
+    rng = np.random.default_rng([family == f for f in CORPORA] + [rate])
+    for n in (1, 2, rate - 1, rate, rate + 1, 5 * rate, 257):
+        text = np.asarray(CORPORA[family](rng, n), np.int64)
+        got = build_sparse_suffix_array(text, rate)
+        want = _oracle_sparse(text, rate)
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"{family} n={n} rate={rate}")
+        assert got.dtype == np.int32
+
+
+def test_empty_text():
+    assert len(build_sparse_suffix_array(np.zeros(0, np.int64), 4)) == 0
+
+
+def test_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="sample_rate"):
+        build_sparse_suffix_array(np.asarray([1, 2, 3]), 1)
+    with pytest.raises(ValueError, match="≥ 0"):
+        build_sparse_suffix_array(np.asarray([1, -2, 3]), 4)
+
+
+@pytest.mark.parametrize("family", ["uniform", "all_equal", "periodic"])
+def test_sparse_lcp_matches_naive(family):
+    rng = np.random.default_rng(5)
+    for n in (0, 1, 7, 64, 300):
+        text = np.asarray(CORPORA[family](rng, n), np.int64)
+        ssa = build_sparse_suffix_array(text, 4)
+        np.testing.assert_array_equal(
+            sparse_lcp(text, ssa), _naive_lcp(text, ssa),
+            err_msg=f"{family} n={n}")
+        # chunk smaller than the longest LCP exercises the refill loop
+        np.testing.assert_array_equal(
+            sparse_lcp(text, ssa, chunk=3), _naive_lcp(text, ssa))

@@ -1,0 +1,208 @@
+"""`SparseSuffixArrayIndex` API contract: facade dispatch, the typed
+short-pattern error, dense-identical query answers, retrace accounting,
+the serving-tier protocol, persistence hooks, and the segmented variant.
+(The randomized sparse-vs-dense differential matrix lives in
+`tests/api/test_fuzz_differential.py` under `-m fuzz`.)"""
+import numpy as np
+import pytest
+
+from repro.api import (SAOptions, SegmentedIndex, SuffixArrayIndex,
+                      build_suffix_array)
+from repro.sparse import PatternTooShortError, SparseSuffixArrayIndex
+from repro.sparse.query import trace_events
+
+RATE = 4
+OPTS = SAOptions(sample_rate=RATE)
+
+
+def _docs(seed=0, n_docs=4, lo=20, hi=120, sigma=6):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, sigma, int(rng.integers(lo, hi)))
+            for _ in range(n_docs)]
+
+
+def _pair(seed=0, **kw):
+    docs = _docs(seed, **kw)
+    return (SuffixArrayIndex.from_docs(docs, SAOptions()),
+            SuffixArrayIndex.from_docs(docs, OPTS), docs)
+
+
+# -------------------------------------------------------- facade dispatch
+def test_facade_dispatches_on_sample_rate():
+    text = np.arange(40) % 7
+    idx = SuffixArrayIndex.build(text, OPTS)
+    assert type(idx) is SparseSuffixArrayIndex
+    assert idx.sample_rate == RATE and idx.min_pattern_len == RATE
+    assert idx.ns == -(-idx.n // RATE)
+    # rate 1 stays dense, and the dense class attribute is the no-floor 0
+    dense = SuffixArrayIndex.build(text, SAOptions())
+    assert type(dense) is SuffixArrayIndex
+    assert dense.min_pattern_len == 0
+
+
+def test_build_suffix_array_rejects_sparse_plan():
+    """The raw-SA entry point returns FULL suffix arrays by contract —
+    a sparse plan must be an error there, not a silently sampled array."""
+    with pytest.raises(ValueError, match="sample_rate"):
+        build_suffix_array(np.arange(10), SAOptions(sample_rate=4))
+
+
+def test_options_validate_sample_rate():
+    with pytest.raises(ValueError, match="sample_rate"):
+        SAOptions(sample_rate=0)
+    with pytest.raises(ValueError, match="sample_rate"):
+        SparseSuffixArrayIndex.build(np.arange(8), SAOptions())
+
+
+def test_fingerprint_carries_rate():
+    assert "rate=4" in OPTS.fingerprint()
+    assert OPTS.fingerprint() != SAOptions().fingerprint()
+
+
+# ------------------------------------------------------ short-pattern error
+def test_pattern_too_short_is_typed_and_described():
+    idx = SuffixArrayIndex.build(np.arange(64) % 5, OPTS)
+    with pytest.raises(PatternTooShortError) as ei:
+        idx.count_batch([[1, 2, 3]])
+    assert isinstance(ei.value, ValueError)          # catchable as ValueError
+    assert ei.value.pattern_len == 3
+    assert ei.value.sample_rate == RATE
+    for meth in (idx.count, idx.contains_batch, idx.locate_batch,
+                 idx.locate_docs_batch):
+        with pytest.raises(PatternTooShortError):
+            meth([[0] * (RATE - 1)])
+    # empty pattern is also below the floor (dense would answer n)
+    with pytest.raises(PatternTooShortError):
+        idx.count([])
+
+
+# ------------------------------------------------------------ dense parity
+def test_queries_identical_to_dense():
+    dense, sparse, docs = _pair(seed=1)
+    pats = [docs[0][:RATE], docs[1][: 2 * RATE + 1], docs[2],
+            np.full(RATE, 5), np.asarray([0, 1, 2, 3] * 3)]
+    np.testing.assert_array_equal(sparse.count_batch(pats),
+                                  dense.count_batch(pats))
+    np.testing.assert_array_equal(sparse.contains_batch(pats),
+                                  dense.contains_batch(pats))
+    for got, want in zip(sparse.locate_batch(pats), dense.locate_batch(pats)):
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(sparse.locate_docs_batch(pats),
+                         dense.locate_docs_batch(pats)):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_longest_match_floors_at_rate():
+    dense, sparse, docs = _pair(seed=2)
+    probe = np.asarray(docs[0][: 3 * RATE], np.int64)
+    want = dense.longest_match(probe)
+    assert want >= RATE                      # a planted substring matches
+    assert sparse.longest_match(probe) == want
+    # nothing ≥ rate in common → 0, not a short-pattern error
+    alien = np.full(2 * RATE, 97, np.int64)
+    assert sparse.longest_match(alien) == 0
+    assert sparse.longest_match(probe[:RATE - 1]) == 0
+
+
+def test_empty_and_tiny_corpora():
+    empty = SuffixArrayIndex.from_docs([], OPTS)
+    assert isinstance(empty, SparseSuffixArrayIndex) and empty.ns == 0
+    assert empty.count_batch([[1] * RATE]).tolist() == [0]
+    assert empty.locate_batch([[1] * RATE])[0].tolist() == []
+    tiny = SuffixArrayIndex.build(np.asarray([2, 2]), OPTS)   # n < rate
+    assert tiny.ns == 1
+    assert tiny.count([2, 2, 2, 2]) == 0
+
+
+def test_sparse_lcp_lazy_property():
+    idx = SuffixArrayIndex.build(np.tile([0, 1], 30), OPTS)
+    assert idx._lcp is None
+    lcp = idx.lcp
+    assert idx._lcp is not None and len(lcp) == idx.ns
+    assert lcp[0] == 0 and (lcp[1:] > 0).any()
+
+
+def test_dense_only_statistics_raise():
+    idx = SuffixArrayIndex.build(np.arange(32) % 3, OPTS)
+    for call in (lambda: idx.ngram_stats(4),
+                 lambda: idx.duplicate_spans(4),
+                 lambda: idx.cross_doc_duplicates(4),
+                 lambda: idx.sa_ranges_batch([[0] * RATE])):
+        with pytest.raises(NotImplementedError):
+            call()
+
+
+# ------------------------------------------------------- retrace accounting
+def test_reused_bucket_does_not_retrace():
+    rng = np.random.default_rng(8)
+    idx = SuffixArrayIndex.build(rng.integers(0, 4, 256), OPTS)
+    idx.count_batch([[0, 1, 2, 3], [1, 2, 3, 0], [2, 3, 0, 1]])
+    before = trace_events()
+    # same (B, L) bucket: different patterns, different batch size
+    idx.count_batch([[1, 1, 2, 2], [3, 3, 3, 3], [0, 1, 0, 1], [2] * 4])
+    idx.locate_batch([[0, 1, 2, 3], [1, 2, 3, 0], [3, 2, 1, 0]])
+    assert trace_events() == before
+    # a genuinely new shape traces once (longer patterns → new L bucket)
+    idx.count_batch([rng.integers(0, 4, 20).tolist()])
+    assert trace_events() == before + 1
+
+
+# --------------------------------------------------- serving-tier protocol
+def test_stage_encoded_ranges_staged_widths_match_dense():
+    dense, sparse, docs = _pair(seed=3)
+    pats = [docs[0][:RATE], np.full(RATE + 2, 3), docs[1][: 2 * RATE]]
+    enc = [sparse._encode_pattern(p) for p in pats]
+    lo, hi = sparse.ranges_staged(sparse.stage_encoded(enc))
+    dl, dh = dense.ranges_staged(dense.stage_encoded(
+        [dense._encode_pattern(p) for p in pats]))
+    # sparse ranges are virtual (lo pinned to 0) but widths are exact
+    np.testing.assert_array_equal(hi - lo, dh - dl)
+    np.testing.assert_array_equal(lo, np.zeros(len(pats), np.int64))
+    np.testing.assert_array_equal(sparse._counts_encoded(enc), dh - dl)
+    for got, want in zip(sparse._positions_encoded(enc),
+                         dense._positions_encoded(
+                             [dense._encode_pattern(p) for p in pats])):
+        np.testing.assert_array_equal(got, want)
+
+
+def test_query_session_warmup_respects_floor():
+    from repro.api.query import QuerySession
+    idx = SuffixArrayIndex.build(np.arange(128) % 5, OPTS)
+    sess = QuerySession(idx)
+    sess.warmup()                              # must not trip the floor
+    counts = sess.count([[0, 1, 2, 3]])
+    assert counts.tolist() == [int(idx.count([0, 1, 2, 3]))]
+
+
+# ----------------------------------------------------------- segmented mode
+def test_segmented_index_goes_sparse_per_segment():
+    docs = _docs(seed=4, n_docs=6)
+    seg = SegmentedIndex.from_docs(docs, OPTS, segment_docs=2)
+    assert seg.min_pattern_len == RATE
+    assert all(isinstance(s.index, SparseSuffixArrayIndex)
+               for s in seg.segments)
+    mono = SegmentedIndex.from_docs(docs, SAOptions(), segment_docs=2)
+    pats = [docs[0][:RATE], docs[3][: 2 * RATE], np.full(RATE, 1)]
+    np.testing.assert_array_equal(seg.count_batch(pats),
+                                  mono.count_batch(pats))
+    for got, want in zip(seg.locate_batch(pats), mono.locate_batch(pats)):
+        np.testing.assert_array_equal(got, want)
+    with pytest.raises(PatternTooShortError):
+        seg.count_batch([[0] * (RATE - 1)])
+    # serving protocol fans out per segment with exact widths
+    enc = [seg._encode_pattern(p) for p in pats]
+    lo, hi = seg.ranges_staged(seg.stage_encoded(enc))
+    np.testing.assert_array_equal(hi - lo, mono.count_batch(pats))
+
+
+def test_segmented_compact_preserves_sparse_answers():
+    docs = _docs(seed=5, n_docs=8)
+    seg = SegmentedIndex.from_docs(docs, OPTS.replace(compact_fanin=2),
+                                   segment_docs=1)
+    seg.compact()
+    assert all(isinstance(s.index, SparseSuffixArrayIndex)
+               for s in seg.segments)
+    mono = SuffixArrayIndex.from_docs(docs, OPTS)
+    pats = [docs[2][:RATE], docs[7][: 2 * RATE]]
+    np.testing.assert_array_equal(seg.count_batch(pats),
+                                  mono.count_batch(pats))

@@ -1,0 +1,89 @@
+"""Sparse-backed training data plane: the sample_rate ≤ gram-length
+guards reject incompatible configs at construction, and a plane whose
+index is sparse streams the exact bytes (and batches) the dense-indexed
+plane produces — the sparse index only ever answers grams ≥ its rate,
+so dedup/gate/probe results cannot drift."""
+import numpy as np
+import pytest
+
+from repro.api import SAOptions, SegmentedIndex
+from repro.configs import get_config
+from repro.data.pipeline import (ContaminationGate, PipelineConfig,
+                                 StreamingDedup, TrainingDataPlane,
+                                 synthetic_doc_shards)
+
+VOCAB = 64
+MIN_LEN = 24
+RATE = 8
+
+
+def make_shards(n_chars=30_000, shard_docs=4, seed=3):
+    return synthetic_doc_shards(n_chars, VOCAB, shard_docs=shard_docs,
+                                doc_len=900, dup_fraction=0.4, seed=seed)
+
+
+# ------------------------------------------------------------------ guards
+def test_pipeline_config_rejects_rate_above_dedup_gram():
+    with pytest.raises(ValueError, match="dedup_min_len"):
+        PipelineConfig(dedup=True, dedup_min_len=8,
+                       options=SAOptions(sample_rate=16))
+    with pytest.raises(ValueError, match="gate_min_len"):
+        PipelineConfig(dedup_min_len=32, gate_min_len=8,
+                       options=SAOptions(sample_rate=16))
+    # equal is fine: an exactly-rate-length gram is still answerable
+    PipelineConfig(dedup=True, dedup_min_len=16, gate_min_len=16,
+                   options=SAOptions(sample_rate=16))
+
+
+def test_sa_config_to_pipeline_carries_the_guard():
+    cfg = get_config("suffix-array")
+    bad = type(cfg)(**{**cfg.__dict__, "sample_rate": 64,
+                       "dedup_min_len": 48})
+    with pytest.raises(ValueError, match="dedup_min_len"):
+        bad.to_pipeline()
+    ok = type(cfg)(**{**cfg.__dict__, "sample_rate": 16})
+    assert ok.to_pipeline().options.sample_rate == 16
+
+
+def test_streaming_dedup_and_gate_validate_directly():
+    seg = SegmentedIndex(options=SAOptions(sample_rate=16), sigma=VOCAB)
+    with pytest.raises(ValueError, match="sample_rate"):
+        StreamingDedup(seg, min_len=8)
+    with pytest.raises(ValueError, match="minimum answerable"):
+        ContaminationGate([np.arange(64) % 7], min_len=8,
+                          options=SAOptions(sample_rate=16), sigma=VOCAB)
+
+
+# ----------------------------------------------------- sparse/dense parity
+def test_sparse_plane_byte_identical_to_dense():
+    """Acceptance: same shards, same config except the index flavour —
+    kept bytes, drop accounting, and the deterministic gated batches all
+    match the dense-indexed plane exactly."""
+    shards = make_shards()
+    rng = np.random.default_rng(11)
+    eval_docs = [rng.integers(0, 32, 1500) for _ in range(2)]
+
+    def build(rate):
+        cfg = PipelineConfig(
+            seq_len=96, global_batch=4, dedup=True, dedup_min_len=MIN_LEN,
+            gate_min_len=MIN_LEN, vocab=VOCAB, seed=5,
+            options=SAOptions(sample_rate=rate))
+        return TrainingDataPlane(cfg, eval_docs=eval_docs, shards=shards)
+
+    dense, sparse = build(1), build(RATE)
+    assert sparse.index.options.sample_rate == RATE
+    assert sparse.index.min_pattern_len == RATE
+    assert dense.report.dropped_chars > 0          # real duplicates removed
+    assert sparse.report.dropped_chars == dense.report.dropped_chars
+    assert len(sparse._kept) == len(dense._kept)
+    for a, b in zip(sparse._kept, dense._kept):
+        np.testing.assert_array_equal(a, b)
+    for step in range(4):                          # gated batches included
+        ba, bb = sparse.batch_at(step), dense.batch_at(step)
+        assert sorted(ba) == sorted(bb)
+        for k in ba:
+            np.testing.assert_array_equal(ba[k], bb[k])
+    # probe rides the sparse training index: floored, never an exception
+    m = sparse.probe([sparse._kept[0][:MIN_LEN * 2],
+                      np.full(MIN_LEN, VOCAB - 1)])
+    assert m["samples"] == 2 and m["longest_copy_max"] >= MIN_LEN
